@@ -1,0 +1,37 @@
+"""Shared benchmark helpers (CPU wall-clock + dry-run byte analysis)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import datasets
+
+BENCH_DATASETS = ("amazon", "delicious", "music", "nell1", "twitch", "vast")
+BENCH_SCALE = 3e-4
+BENCH_MAX_NNZ = 60_000
+RANK = 32  # paper default R
+
+
+def load_bench_tensor(name: str, **kw):
+    return datasets.load(name, scale=BENCH_SCALE, max_nnz=BENCH_MAX_NNZ,
+                         seed=0, **kw)
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time (seconds) of a device-blocking call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(rows):
+    """CSV contract: name,us_per_call,derived."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,56 @@
+"""Paper Fig. 8: thread-block shape sweep (P = nonzeros per block).
+
+The paper sweeps P in {1..64} at R = 32 and finds P = 32 optimal for a
+1024-thread block. The TPU analogue sweeps the kernel block P over
+{8..256}: P sets the MXU contraction depth of the one-hot segment
+reduction and the padding overhead of the rectangular layout. We report
+wall time of the (XLA-lowered) blocked EC per P plus the analytic VMEM
+footprint per block — the structural argument for the default P = 128
+(one sublane tile).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import datasets, init_factors
+from repro.core.mttkrp import MTTKRPExecutor, compute_lrow, _ec_xla
+from repro.core.flycoo import build_flycoo
+
+from .common import RANK, emit, time_fn
+
+
+def run():
+    rows = []
+    name = "nell1"
+    ts = datasets.spec(name, scale=3e-4, max_nnz=60_000)
+    idx, val = datasets.synthesize(ts, seed=0)
+    for p in (8, 16, 32, 64, 128, 256):
+        t = build_flycoo(idx, val, ts.dims, block_p=p)
+        plan = t.plans[0]
+        exe = MTTKRPExecutor(t)
+        factors = tuple(init_factors(jax.random.PRNGKey(0), t.dims, RANK))
+        rr = exe.row_relabel[0]
+
+        @jax.jit
+        def ec(layout, f, rr, plan=plan):
+            alive = layout["alpha"][:, 0] >= 0
+            lrow = compute_lrow(layout["idx"][:, 0], rr, plan.rows_pp, alive)
+            return _ec_xla({"val": layout["val"], "idx": layout["idx"],
+                            "lrow": lrow}, f, 0, rows_pp=plan.rows_pp,
+                           blocks_pp=plan.blocks_pp, block_p=plan.block_p,
+                           kappa=plan.kappa)
+
+        wall = time_fn(ec, exe.layout, factors, rr)
+        pad = plan.padded_nnz / t.nnz
+        # kernel VMEM/block: gathered (P, N-1, R) + out tile (rows_pp, R) f32
+        vmem_kb = (p * (t.nmodes - 1) * RANK + plan.rows_pp * RANK) * 4 / 1024
+        rows.append((f"fig8_block_sweep/P={p}", wall * 1e6,
+                     f"padding_overhead={pad:.3f};vmem_per_block_kb="
+                     f"{vmem_kb:.0f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

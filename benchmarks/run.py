@@ -1,0 +1,37 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (contract for graders).
+  fig5   remap overhead split (paper: 5-35%)
+  fig6/7 compute-throughput + memory-traffic proxies (Nsight counters have
+         no CPU analogue; cost_analysis bytes stand in)
+  fig8   block-shape (P) sweep
+  fig9   total all-modes time vs COO / mode-specific baselines (Table 4)
+  fig10  preprocessing time (nnz-bound vs index-space-bound)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (fig5_remap_overhead, fig6_7_throughput, fig8_block_sweep,
+                   fig9_total_time, fig10_preprocessing)
+
+    mods = [fig5_remap_overhead, fig6_7_throughput, fig8_block_sweep,
+            fig9_total_time, fig10_preprocessing]
+    failed = []
+    print("name,us_per_call,derived")
+    for mod in mods:
+        try:
+            mod.run()
+        except Exception:
+            failed.append(mod.__name__)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

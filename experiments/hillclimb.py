@@ -1,0 +1,78 @@
+"""§Perf Phase-2 hillclimbs: three cells, hypothesis -> change -> measure.
+
+Run AFTER the baseline sweep:  PYTHONPATH=src python experiments/hillclimb.py
+Writes experiments/hillclimb/<cell>__<opt>.json; report renders the log.
+"""
+import dataclasses
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.launch.dryrun import lower_cell_with_variants  # noqa: E402
+from repro.configs import get_config                       # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "hillclimb")
+os.makedirs(OUT, exist_ok=True)
+
+EXPERIMENTS = [
+    # (arch, shape, tag, cfg-transform, cast_once)
+    ("tinyllama-1.1b", "train_4k", "cast_once", None, True),
+    ("tinyllama-1.1b", "train_4k", "no_sp",
+     lambda c: dataclasses.replace(c, seq_shard_carry=False), False),
+    ("tinyllama-1.1b", "train_4k", "no_sp_cast",
+     lambda c: dataclasses.replace(c, seq_shard_carry=False), True),
+    ("command-r-plus-104b", "train_4k", "cast_once", None, True),
+    ("qwen2.5-3b", "decode_32k", "kv_quant",
+     lambda c: dataclasses.replace(c, kv_quant=True), False),
+]
+
+
+def main():
+    for arch, shape, tag, tf, cast in EXPERIMENTS:
+        path = os.path.join(OUT, f"{arch}__{shape}__{tag}.json")
+        if os.path.exists(path):
+            print("cached", path)
+            continue
+        cfg = get_config(arch)
+        if tf is not None:
+            cfg = tf(cfg)
+        try:
+            rec = lower_cell_with_variants(arch, shape, cfg=cfg,
+                                           cast_once=cast)
+            rec["opt_tag"] = tag
+            rec["ok"] = True
+            print(f"OK {arch} {shape} {tag}: peak "
+                  f"{rec['memory']['peak_per_device_gb']:.2f} GB "
+                  f"coll {rec['collectives_per_device']['total']/1e9:.2f} GB")
+        except Exception as e:
+            import traceback
+            rec = {"ok": False, "error": str(e),
+                   "trace": traceback.format_exc()}
+            print("FAIL", arch, shape, tag, e)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()
+
+
+EXPERIMENTS_ROUND2 = [
+    # inference: SP carries cost a gather/layer but save nothing (no bwd)
+    ("recurrentgemma-9b", "prefill_32k", "no_sp_infer",
+     lambda c: dataclasses.replace(c, seq_shard_carry=False), False),
+    ("command-r-plus-104b", "prefill_32k", "no_sp_infer",
+     lambda c: dataclasses.replace(c, seq_shard_carry=False), False),
+    # int8 KV for the two decode cells closest to the HBM limit
+    ("command-r-plus-104b", "decode_32k", "kv_quant",
+     lambda c: dataclasses.replace(c, kv_quant=True), False),
+    ("qwen3-moe-235b-a22b", "decode_32k", "kv_quant",
+     lambda c: dataclasses.replace(c, kv_quant=True), False),
+]
+
+
+def round2():
+    global EXPERIMENTS
+    EXPERIMENTS = EXPERIMENTS_ROUND2
+    main()

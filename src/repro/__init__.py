@@ -1,0 +1,4 @@
+"""FLYCOO-TPU: Sparse MTTKRP for Tensor Decomposition (CF'24) as a
+production multi-pod JAX framework. See DESIGN.md / EXPERIMENTS.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+"""Roofline + HLO traffic analysis (dry-run artifacts only)."""
+from .hlo import collective_bytes
+from .roofline import HW, Roofline, analyze, corrected_costs, model_flops
+
+__all__ = ["collective_bytes", "HW", "Roofline", "analyze",
+           "corrected_costs", "model_flops"]

@@ -1,0 +1,96 @@
+"""Parse compiled (post-SPMD) HLO text for collective traffic.
+
+``cost_analysis()`` does not report collective bytes, so we scan the
+compiled module for all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops and account ring-algorithm bytes-on-the-wire per
+device. Ops inside ``while`` bodies appear once; the roofline module scales
+loop-body contributions by trip count via config variants (see
+analysis/roofline.py).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\](?:\{[^}]*\})?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes-on-the-wire by collective kind (ring algorithm).
+
+    result-shape conventions (R = result bytes, n = group size):
+      all-gather         R * (n-1)/n     (result is the gathered buffer)
+      all-reduce         R * 2(n-1)/n    (reduce-scatter + all-gather)
+      reduce-scatter     R * (n-1)       (operand = n*R streamed through)
+      all-to-all         R * (n-1)/n
+      collective-permute R
+    """
+    out: dict = defaultdict(float)
+    counts: dict = defaultdict(int)
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:  # async pair: count only the -start
+            continue
+        tuple_part, dtype, dims, kind = m.groups()
+        if tuple_part is not None:
+            rbytes = sum(_shape_bytes(dt, dm) for dt, dm in
+                         _SHAPE_RE.findall(tuple_part))
+        else:
+            rbytes = _shape_bytes(dtype, dims)
+        n = max(_group_size(line), 1)
+        if n == 1:
+            continue
+        # CPU FloatNormalization promotes bf16 reduces to f32 and marks the
+        # reducer "<op>_promoted": halve to recover the TPU-native bf16 bytes.
+        if "_promoted" in line and kind in ("all-reduce", "reduce-scatter"):
+            rbytes //= 2
+        if kind == "all-gather":
+            b = rbytes * (n - 1) / n
+        elif kind == "all-reduce":
+            b = rbytes * 2 * (n - 1) / n
+        elif kind == "reduce-scatter":
+            b = rbytes * (n - 1)
+        elif kind == "all-to-all":
+            b = rbytes * (n - 1) / n
+        else:  # collective-permute
+            b = rbytes
+        out[kind] += b
+        counts[kind] += 1
+    result = dict(out)
+    result["total"] = float(sum(out.values()))
+    result["counts"] = dict(counts)
+    return result

@@ -1,0 +1,129 @@
+"""Three-term roofline from dry-run records (TPU v5e targets).
+
+    compute term    = FLOPs_per_device / peak_flops
+    memory term     = HLO_bytes_per_device / hbm_bw
+    collective term = collective_bytes_per_device / link_bw
+
+Scan correction (cost_analysis counts a while-body once): with variant
+compiles F(nonloop) and F(stage_s) (one cycle), per-cycle body cost is
+``F(stage_s) - F(nonloop)`` and the corrected total is
+
+    F(full) + sum_s (rep_s - 1) * body_s
+
+For bytes, the optimizer's parameter traffic lives *outside* the scan and is
+already fully counted in F(full), so the body correction subtracts an
+analytic estimate of the cycle's optimizer read/write bytes.
+
+Roofline fraction (the §Perf score) = MODEL_FLOPS-ideal time / max(term):
+    MODEL_FLOPS = 6*N_active*tokens (train) or 2*N_active*tokens (inference)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+HW = {
+    "peak_flops": 197e12,   # bf16 / chip (TPU v5e)
+    "hbm_bw": 819e9,        # B/s per chip
+    "link_bw": 50e9,        # B/s per ICI link
+}
+
+_ADAM_RW_F32 = 28   # g+m+v+p reads, m+v+p writes (4B each)
+_ADAM_RW_BF16 = 20  # bf16 moments
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float            # corrected, per device
+    bytes: float
+    coll_bytes: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops_total: float
+    useful_ratio: float     # MODEL_FLOPS / (corrected flops * chips)
+    roofline_fraction: float
+    est_step_s: float
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def _tokens(rec) -> float:
+    from ..configs import SHAPES
+
+    shape = SHAPES[rec["shape"]]
+    if rec["step"] == "decode":
+        return shape.global_batch  # one new token per sequence
+    return shape.global_batch * shape.seq_len
+
+
+def model_flops(rec) -> float:
+    n = rec["active_params"]
+    toks = _tokens(rec)
+    mult = 6.0 if rec["step"] == "train" else 2.0
+    return mult * n * toks
+
+
+def corrected_costs(rec, opt_bf16: bool = False) -> tuple[float, float, float]:
+    """(flops, bytes, collective bytes) per device, scan-corrected.
+
+    With variants present, costs come from cost-mode compiles only:
+        nonloop + sum_s rep_s * (variant_s - nonloop [- opt traffic])
+    (the full compile's numbers carry scanned chunk loops => undercount).
+    The optimizer's stacked-param traffic is charged once, analytically,
+    because it lives outside every scan in the full program.
+    """
+    variants = rec.get("variants")
+    if not variants or "nonloop" not in variants:
+        return (rec["cost"]["flops_per_device"],
+                rec["cost"]["bytes_per_device"],
+                rec["collectives_per_device"]["total"])
+    nl = variants["nonloop"]
+    rw = _ADAM_RW_BF16 if opt_bf16 else _ADAM_RW_F32
+    n_dev = rec["n_devices"]
+    f = nl["flops_per_device"]
+    b = nl["bytes_per_device"]
+    c = nl["collectives_per_device"]["total"]
+    for tag, v in variants.items():
+        if tag == "nonloop" or v["rep"] < 1:
+            continue
+        body_f = max(v["flops_per_device"] - nl["flops_per_device"], 0.0)
+        body_b = v["bytes_per_device"] - nl["bytes_per_device"]
+        body_c = (v["collectives_per_device"]["total"]
+                  - nl["collectives_per_device"]["total"])
+        body_params = max(v.get("params", 0) - nl.get("params", 0), 0)
+        if rec["step"] == "train" and body_params:
+            # remove the cycle's optimizer traffic from the body, then
+            # charge the full stacked-param traffic once at the end
+            body_b -= body_params * rw / n_dev
+        body_b = max(body_b, 0.0)
+        body_c = max(body_c, 0.0)
+        f += v["rep"] * body_f
+        b += v["rep"] * body_b
+        c += v["rep"] * body_c
+    if rec["step"] == "train":
+        b += rec["params"] * rw / n_dev  # stacked-param optimizer traffic
+    return f, b, c
+
+
+def analyze(rec, hw=HW, opt_bf16: bool = False) -> Roofline:
+    f, b, c = corrected_costs(rec, opt_bf16=opt_bf16)
+    t_comp = f / hw["peak_flops"]
+    t_mem = b / hw["hbm_bw"]
+    t_coll = c / hw["link_bw"]
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    n_dev = rec["n_devices"]
+    est = max(terms.values())
+    ideal = mf / (n_dev * hw["peak_flops"])
+    return Roofline(
+        flops=f, bytes=b, coll_bytes=c,
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        dominant=dominant,
+        model_flops_total=mf,
+        useful_ratio=mf / max(f * n_dev, 1.0),
+        roofline_fraction=ideal / max(est, 1e-12),
+        est_step_s=est,
+    )

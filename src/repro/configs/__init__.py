@@ -1,0 +1,63 @@
+"""Configs: the 10 assigned architectures x 4 input shapes.
+
+``input_specs`` builds weak-type-correct ShapeDtypeStruct stand-ins for every
+model input of a (arch, shape) cell — no device allocation, shardable — the
+contract the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.common import ModelConfig
+from .archs import ARCHS, get_config, smoke
+from .shapes import SHAPES, ShapeSpec, applicable, cells
+
+WHISPER_CROSS_LEN = 1500  # real whisper encoder output length (30 s audio)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStructs for the step function of this (arch, shape) cell.
+
+    train/prefill: token batch (+ stub modality embeddings);
+    decode: one new token; the KV/state cache spec comes from
+    ``jax.eval_shape`` over ``init_cache`` (launch/dryrun attaches shardings).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    emb = jnp.dtype(cfg.compute_dtype)
+    if shape.step in ("train", "prefill"):
+        if cfg.kind == "vlm":
+            n_txt = s - cfg.n_img_tokens
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, n_txt), i32),
+                "embeds": jax.ShapeDtypeStruct(
+                    (b, cfg.n_img_tokens, cfg.d_model), emb),
+            }
+        elif cfg.kind == "audio":
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "enc_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), emb),
+            }
+        else:
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if shape.step == "train":
+            tgt = specs["tokens"].shape
+            specs["targets"] = jax.ShapeDtypeStruct(tgt, i32)
+        return specs
+    # decode: one token against a cache of seq_len
+    return {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """ShapeDtypeStruct pytree for the decode cache (no allocation)."""
+    from ..models import transformer
+
+    return jax.eval_shape(
+        lambda: transformer.init_cache(
+            cfg, shape.global_batch, shape.seq_len,
+            enc_len=WHISPER_CROSS_LEN if cfg.kind == "audio" else 0))
+
+
+__all__ = ["ARCHS", "SHAPES", "get_config", "smoke", "applicable", "cells",
+           "input_specs", "cache_specs", "WHISPER_CROSS_LEN"]

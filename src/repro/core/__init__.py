@@ -1,0 +1,12 @@
+"""Core paper contribution: FLYCOO-TPU spMTTKRP + CPD-ALS (see DESIGN.md)."""
+from .flycoo import FlycooTensor, build_flycoo
+from .partition import ModePlan, plan_mode, choose_kappa
+from .mttkrp import MTTKRPExecutor, mttkrp_ref, mode_step
+from .cpd import CPDResult, cp_als, cp_als_reference, init_factors
+from . import datasets
+
+__all__ = [
+    "FlycooTensor", "build_flycoo", "ModePlan", "plan_mode", "choose_kappa",
+    "MTTKRPExecutor", "mttkrp_ref", "mode_step", "CPDResult", "cp_als",
+    "cp_als_reference", "init_factors", "datasets",
+]

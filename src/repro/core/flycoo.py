@@ -1,0 +1,114 @@
+"""FLYCOO-TPU sparse tensor format (paper Sec. 3, adapted per DESIGN.md Sec. 2).
+
+A tensor element is the tuple ``<alpha_i, beta_i, val_i>`` (paper Sec. 3.5):
+``beta_i``  = per-mode indices (c_0..c_{N-1}),
+``alpha_i`` = per-mode remap ids (b_0..b_{N-1}) — the element's physical slot
+in the mode-d kernel layout.
+
+The mode-d *kernel layout* is rectangular (see ``partition.ModePlan``):
+``kappa_d`` partitions x ``blocks_pp_d * P`` slots each. Pad slots hold
+``val = 0`` and ``lrow = -1`` so they contribute nothing (DESIGN.md Sec. 2).
+
+Per-slot arrays in layout d:
+  val   (S_d,)    f32    nonzero value (0 in pads)
+  idx   (S_d, N)  i32    original per-mode indices (0 in pads)
+  lrow  (S_d,)    i32    relabeled row id *local to its partition* for the
+                         output mode d (-1 in pads)
+  dst   (S_d,)    i32    slot of the same element in layout (d+1) mod N
+                         (-1 in pads) — drives dynamic remapping (Alg. 3)
+
+``dst`` is what makes remapping "dynamic": the mode-d pass scatters its own
+elements into the mode-(d+1) layout while computing mode d, exactly the
+paper's Alg. 3 (unique remap ids => conflict-free scatter, Observation 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+from .partition import ModePlan, plan_mode
+
+
+@dataclasses.dataclass
+class FlycooTensor:
+    """A sparse tensor in FLYCOO-TPU format (host-side container).
+
+    ``indices``/``values`` are kept in canonical (input) element order for
+    reference computations; ``plans[d]`` carries each mode's kernel layout.
+    """
+
+    dims: tuple[int, ...]
+    indices: np.ndarray           # (nnz, N) int32, canonical order
+    values: np.ndarray            # (nnz,) float32, canonical order
+    plans: list[ModePlan]
+
+    @property
+    def nmodes(self) -> int:
+        return len(self.dims)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.values.shape[0])
+
+    # ---------------------------------------------------------------- layout
+    def layout_arrays(self, d: int) -> dict[str, np.ndarray]:
+        """Materialize the mode-d kernel layout arrays (val/idx/lrow/dst)."""
+        plan = self.plans[d]
+        nxt = self.plans[(d + 1) % self.nmodes]
+        S = plan.padded_nnz
+        val = np.zeros(S, dtype=np.float32)
+        idx = np.zeros((S, self.nmodes), dtype=np.int32)
+        lrow = np.full(S, -1, dtype=np.int32)
+        dst = np.full(S, -1, dtype=np.int32)
+
+        slots = plan.slot_of_elem
+        val[slots] = self.values
+        idx[slots] = self.indices
+        # local row within owning partition, in relabeled space
+        rel = plan.row_relabel[self.indices[:, d]].astype(np.int64)
+        lrow[slots] = (rel % plan.rows_pp).astype(np.int32)
+        dst[slots] = nxt.slot_of_elem.astype(np.int32)
+        return {"val": val, "idx": idx, "lrow": lrow, "dst": dst}
+
+    # -------------------------------------------------------------- metadata
+    def memory_bits_per_element(self, float_bits: int = 32) -> float:
+        """Paper Sec. 3.5.1: N*log2(|X|) + sum_h log2(I_h) + delta_float."""
+        n = self.nmodes
+        return (
+            n * math.log2(max(self.nnz, 2))
+            + sum(math.log2(max(i, 2)) for i in self.dims)
+            + float_bits
+        )
+
+    def load_balance(self) -> list[dict]:
+        return [p.load_balance() for p in self.plans]
+
+
+def build_flycoo(
+    indices: np.ndarray,
+    values: np.ndarray,
+    dims: Sequence[int],
+    kappa: int | None = None,
+    rows_pp: int | None = None,
+    block_p: int = 128,
+) -> FlycooTensor:
+    """Preprocess a COO tensor into FLYCOO-TPU format (paper Sec. 5.7 cost:
+    O(nnz log nnz) per mode, touching only nonzeros — never the index space).
+    """
+    indices = np.ascontiguousarray(np.asarray(indices, dtype=np.int32))
+    values = np.ascontiguousarray(np.asarray(values, dtype=np.float32))
+    assert indices.ndim == 2 and indices.shape[0] == values.shape[0]
+    n = indices.shape[1]
+    assert len(dims) == n and n >= 3, "paper targets tensors of mode >= 3"
+    for d in range(n):
+        assert indices[:, d].min(initial=0) >= 0
+        assert indices[:, d].max(initial=0) < dims[d]
+    plans = [
+        plan_mode(indices[:, d], int(dims[d]), d, kappa=kappa,
+                  rows_pp=rows_pp, block_p=block_p)
+        for d in range(n)
+    ]
+    return FlycooTensor(tuple(int(x) for x in dims), indices, values, plans)

@@ -1,0 +1,208 @@
+"""spMTTKRP along all modes (paper Alg. 2/4/5) on the FLYCOO-TPU layout.
+
+Runtime state for the current mode-d layout (device arrays; pads hold
+val=0, idx=0, alpha=-1):
+
+  val   (S_d,)    f32
+  idx   (S_d, N)  i32   beta  — original per-mode indices
+  alpha (S_d, N)  i32   alpha — the element's slot in *every* mode layout
+                        (alpha[s, d] == s for live slots in layout d)
+
+One ``mode_step`` jit performs, exactly as the paper's thread block does
+(Alg. 4): (a) elementwise computation for mode d (Alg. 2) and (b) dynamic
+tensor remapping into the mode-(d+1) layout (Alg. 3). Remapping is a
+conflict-free scatter because remap ids are unique (Observation 1); output
+accumulation needs no cross-partition reduction because every output row is
+owned by one partition (Observation 2) — in XLA terms the segment-sum within
+a partition's contiguous relabeled row block, in Pallas terms a VMEM-resident
+one-hot MXU accumulation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .flycoo import FlycooTensor
+
+
+# --------------------------------------------------------------------------
+# Reference oracle (canonical COO order, no FLYCOO machinery).
+# --------------------------------------------------------------------------
+def mttkrp_ref(indices, values, factors, mode: int, dim: int):
+    """Pure-jnp oracle: out[i_d, r] = sum_nnz val * prod_{w!=d} F_w[i_w, r]."""
+    partials = values[:, None].astype(jnp.float32)
+    for w, f in enumerate(factors):
+        if w == mode:
+            continue
+        partials = partials * f[indices[:, w]]
+    return jax.ops.segment_sum(partials, indices[:, mode], num_segments=dim)
+
+
+# --------------------------------------------------------------------------
+# Mode-d elementwise computation on the kernel layout (Alg. 2 + 4).
+# --------------------------------------------------------------------------
+def _gather_partials(layout, factors, mode: int):
+    """ell(r) = val * prod_{w != d} Y_w[c_w, r]  (Alg. 2 lines 7-13)."""
+    val, idx = layout["val"], layout["idx"]
+    partials = val[:, None].astype(jnp.float32)
+    for w, f in enumerate(factors):
+        if w == mode:
+            continue
+        partials = partials * jnp.take(f, idx[:, w], axis=0, mode="fill",
+                                       fill_value=0.0)
+    return partials
+
+
+def _ec_xla(layout, factors, mode: int, *, rows_pp, blocks_pp, block_p,
+            kappa):
+    """XLA backend: segment-sum into the relabeled row space.
+
+    Pads have alpha[s, d] = -1 => lrow -1 => routed to a dump row with
+    val = 0 (contributes nothing).
+    """
+    partials = _gather_partials(layout, factors, mode)
+    stride = blocks_pp * block_p
+    slot = jnp.arange(layout["val"].shape[0], dtype=jnp.int32)
+    part = slot // stride
+    lrow = layout["lrow"]
+    gid = jnp.where(lrow < 0, 0, part * rows_pp + lrow)
+    return jax.ops.segment_sum(partials, gid, num_segments=kappa * rows_pp)
+
+
+def _ec_pallas(layout, factors, mode: int, interpret: bool, *, kappa,
+               rows_pp, blocks_pp, block_p):
+    from repro.kernels import ops as kops
+
+    partials_in = []  # gathered input rows, kernel multiplies them
+    for w, f in enumerate(factors):
+        if w == mode:
+            continue
+        partials_in.append(jnp.take(f, layout["idx"][:, w], axis=0,
+                                    mode="fill", fill_value=0.0))
+    gathered = jnp.stack(partials_in, axis=1)  # (S, N-1, R)
+    return kops.mttkrp_fused(
+        gathered,
+        layout["val"],
+        layout["lrow"],
+        kappa=kappa,
+        rows_pp=rows_pp,
+        blocks_pp=blocks_pp,
+        block_p=block_p,
+        interpret=interpret,
+    )
+
+
+def compute_lrow(idx_d, row_relabel_d, rows_pp: int, alive):
+    """Recompute local row ids after a remap (relabel table lookup)."""
+    rel = jnp.take(row_relabel_d, idx_d, axis=0, mode="fill", fill_value=0)
+    return jnp.where(alive, rel % rows_pp, -1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mode", "rows_pp", "blocks_pp", "block_p", "kappa",
+                     "next_size", "backend", "interpret"),
+)
+def mode_step(layout, factors, row_relabel_d, *, mode: int, rows_pp: int,
+              blocks_pp: int, block_p: int, kappa: int, next_size: int,
+              backend: str = "xla", interpret: bool = False):
+    """One iteration of Alg. 5's mode loop: EC (Alg. 2) + remap (Alg. 3).
+
+    Returns (out_rel, next_layout). ``out_rel`` is the mode-d MTTKRP result
+    in relabeled row space; caller maps back with ``row_relabel``.
+    """
+    nmodes = layout["idx"].shape[1]
+    alive = layout["alpha"][:, mode] >= 0
+    lrow = compute_lrow(layout["idx"][:, mode], row_relabel_d, rows_pp, alive)
+    ec_layout = {"val": layout["val"], "idx": layout["idx"], "lrow": lrow}
+    if backend == "pallas":
+        out_rel = _ec_pallas(ec_layout, factors, mode, interpret,
+                             kappa=kappa, rows_pp=rows_pp,
+                             blocks_pp=blocks_pp, block_p=block_p)
+    else:
+        out_rel = _ec_xla(ec_layout, factors, mode, rows_pp=rows_pp,
+                          blocks_pp=blocks_pp, block_p=block_p, kappa=kappa)
+
+    # ---- Alg. 3: dynamic remap into the mode-(d+1) layout. -----------------
+    nxt = (mode + 1) % nmodes
+    dst = layout["alpha"][:, nxt]
+    sdst = jnp.where(alive, dst, next_size)  # park pads out of range -> drop
+    next_layout = {
+        "val": jnp.zeros((next_size,), jnp.float32)
+        .at[sdst].set(layout["val"], mode="drop", unique_indices=True),
+        "idx": jnp.zeros((next_size, nmodes), jnp.int32)
+        .at[sdst].set(layout["idx"], mode="drop", unique_indices=True),
+        "alpha": jnp.full((next_size, nmodes), -1, jnp.int32)
+        .at[sdst].set(layout["alpha"], mode="drop", unique_indices=True),
+    }
+    return out_rel, next_layout
+
+
+# --------------------------------------------------------------------------
+# Host-side driver (Alg. 5).
+# --------------------------------------------------------------------------
+class MTTKRPExecutor:
+    """Executes spMTTKRP along all modes with dynamic remapping (Alg. 5).
+
+    Holds device copies of the relabel tables and the *current* layout; the
+    layout rotates through the modes as computation proceeds, exactly like
+    the paper's T_in/T_out swap — one live tensor copy plus the remap target.
+    """
+
+    def __init__(self, tensor: FlycooTensor, backend: str = "xla",
+                 interpret: bool = False):
+        self.tensor = tensor
+        self.backend = backend
+        self.interpret = interpret
+        self.plans = tensor.plans
+        # note: out_user[v] = out_rel[row_relabel[v]] (relabel is old->new)
+        self.row_relabel = [jnp.asarray(p.row_relabel) for p in self.plans]
+        arrs = tensor.layout_arrays(0)
+        alpha = np.stack(
+            [self._alpha_for_mode(d) for d in range(tensor.nmodes)], axis=1
+        )
+        self.layout = {
+            "val": jnp.asarray(arrs["val"]),
+            "idx": jnp.asarray(arrs["idx"]),
+            "alpha": jnp.asarray(alpha),
+        }
+        self.current_mode = 0
+
+    def _alpha_for_mode(self, d: int) -> np.ndarray:
+        """alpha column d, laid out physically in mode-0 slots."""
+        p0 = self.tensor.plans[0]
+        pd = self.tensor.plans[d]
+        col = np.full(p0.padded_nnz, -1, dtype=np.int32)
+        col[p0.slot_of_elem] = pd.slot_of_elem.astype(np.int32)
+        return col
+
+    def step(self, factors: Sequence[jax.Array]) -> jax.Array:
+        """Compute MTTKRP for the current mode; remap to the next; rotate."""
+        d = self.current_mode
+        plan = self.plans[d]
+        nxt = (d + 1) % self.tensor.nmodes
+        out_rel, next_layout = mode_step(
+            self.layout,
+            tuple(factors),
+            self.row_relabel[d],
+            mode=d,
+            rows_pp=plan.rows_pp,
+            blocks_pp=plan.blocks_pp,
+            block_p=plan.block_p,
+            kappa=plan.kappa,
+            next_size=self.plans[nxt].padded_nnz,
+            backend=self.backend,
+            interpret=self.interpret,
+        )
+        out = jnp.take(out_rel, self.row_relabel[d], axis=0)  # un-relabel
+        self.layout = next_layout
+        self.current_mode = nxt
+        return out
+
+    def all_modes(self, factors: Sequence[jax.Array]) -> list[jax.Array]:
+        assert self.current_mode == 0, "executor must be at mode 0"
+        return [self.step(factors) for _ in range(self.tensor.nmodes)]

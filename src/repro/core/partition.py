@@ -1,0 +1,145 @@
+"""Tensor partitioning scheme (paper Alg. 1) + TPU row relabeling.
+
+Per output mode d:
+  1. order mode-d vertices (output factor rows) by the number of incident
+     nonzeros (hyperedge degree), descending;
+  2. deal vertices cyclically over ``kappa`` partitions (paper Sec. 3.4.1
+     cites Graham's 4/3; the cyclic deal is round-robin-on-sorted, whose
+     provable makespan bound is mean + d_max <= 2*OPT, matching the 4/3
+     regime whenever the max vertex degree is small vs. the mean load —
+     the sparse-tensor common case; property-tested in tests/);
+  3. every nonzero joins the partition owning its mode-d vertex, so each
+     output row is owned by exactly one partition (paper Observation 2).
+
+TPU adaptation (see DESIGN.md Sec. 2): vertices are *relabeled* so partition
+``j`` owns the contiguous row range ``[j*rows_pp, (j+1)*rows_pp)``. This lets
+a Pallas output BlockSpec map partition -> VMEM row tile. Relabeling permutes
+rows only; the per-partition degree multiset (and hence the 4/3 bound) is
+unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+# Default tile knobs (DESIGN.md Sec. 2: kappa is a VMEM tiling knob on TPU,
+# not a core count). rows_pp * R * 4B must fit comfortably in VMEM.
+DEFAULT_ROWS_PER_PARTITION = 512
+DEFAULT_BLOCK_P = 128  # nonzeros per kernel block (sublane-aligned)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModePlan:
+    """Host-side preprocessing output for one output mode ``d``.
+
+    The *kernel layout* for mode d is rectangular: ``kappa`` partitions, each
+    padded to ``blocks_pp`` blocks of ``block_p`` slots; physical length is
+    ``kappa * blocks_pp * block_p``. Pad slots carry ``val = 0, lrow = -1``.
+    """
+
+    mode: int
+    kappa: int                   # number of partitions
+    rows_pp: int                 # relabeled rows per partition (row tile height)
+    block_p: int                 # nonzeros per kernel block (paper's P)
+    blocks_pp: int               # blocks per partition (rectangular grid)
+    dim: int                     # I_d
+    # vertex relabeling: old row id -> relabeled row id in [0, kappa*rows_pp)
+    row_relabel: np.ndarray      # (I_d,) int32
+    # element -> physical slot in this mode's kernel layout (compact order)
+    slot_of_elem: np.ndarray     # (nnz,) int64
+    # per-partition true nonzero counts (for load-balance reporting)
+    part_nnz: np.ndarray         # (kappa,) int64
+
+    @property
+    def padded_nnz(self) -> int:
+        return self.kappa * self.blocks_pp * self.block_p
+
+    @property
+    def relabeled_rows(self) -> int:
+        return self.kappa * self.rows_pp
+
+    def load_balance(self) -> dict:
+        """Max/mean partition load; paper Sec 3.4.1 bounds max <= 4/3 OPT.
+
+        OPT >= max(mean, max vertex degree); we report the achieved ratio
+        against that lower bound.
+        """
+        loads = self.part_nnz.astype(np.float64)
+        mean = float(loads.mean())
+        return {
+            "max": float(loads.max()),
+            "mean": mean,
+            "imbalance": float(loads.max() / max(mean, 1e-9)),
+        }
+
+
+def choose_kappa(dim: int, rows_pp: int = DEFAULT_ROWS_PER_PARTITION) -> int:
+    return max(1, math.ceil(dim / rows_pp))
+
+
+def plan_mode(
+    indices_d: np.ndarray,
+    dim: int,
+    mode: int,
+    kappa: int | None = None,
+    rows_pp: int | None = None,
+    block_p: int = DEFAULT_BLOCK_P,
+) -> ModePlan:
+    """Run Alg. 1 for one mode and derive the rectangular kernel layout.
+
+    Args:
+      indices_d: (nnz,) mode-d index of every nonzero.
+      dim: I_d.
+      mode: d (bookkeeping only).
+      kappa: partition count; default sized so row tiles fit VMEM.
+      rows_pp: rows per partition; derived from kappa when not given.
+    """
+    indices_d = np.asarray(indices_d, dtype=np.int64)
+    nnz = indices_d.shape[0]
+    if kappa is None:
+        kappa = choose_kappa(dim, rows_pp or DEFAULT_ROWS_PER_PARTITION)
+    kappa = min(kappa, dim)  # never more partitions than rows
+    rows_pp = math.ceil(dim / kappa)
+
+    # --- Alg. 1 step 1: vertices sorted by degree (descending, stable). ---
+    degrees = np.bincount(indices_d, minlength=dim)
+    vsort = np.argsort(-degrees, kind="stable")  # (I_d,) vertex ids
+
+    # --- Alg. 1 step 2: cyclic deal over kappa partitions. ---
+    # vertex vsort[i] -> partition i % kappa, local row i // kappa.
+    part_of_rank = np.arange(dim) % kappa
+    local_of_rank = np.arange(dim) // kappa
+    row_relabel = np.empty(dim, dtype=np.int64)
+    row_relabel[vsort] = part_of_rank * rows_pp + local_of_rank
+    part_of_vertex = np.empty(dim, dtype=np.int64)
+    part_of_vertex[vsort] = part_of_rank
+
+    # --- Alg. 1 step 3: collect hyperedges per partition; assign remap ids.
+    part_of_elem = part_of_vertex[indices_d]
+    part_nnz = np.bincount(part_of_elem, minlength=kappa)
+
+    # Rectangular layout: partition j occupies slots [j*T*P, (j+1)*T*P).
+    blocks_pp = max(1, math.ceil(int(part_nnz.max(initial=0)) / block_p))
+    stride = blocks_pp * block_p
+
+    # Position of each element within its partition: stable sort by partition,
+    # then rank within group. (Remap id b_d = j*stride + rank.)
+    order = np.argsort(part_of_elem, kind="stable")
+    rank_within = np.empty(nnz, dtype=np.int64)
+    part_starts = np.concatenate([[0], np.cumsum(part_nnz)])
+    rank_within[order] = np.arange(nnz) - part_starts[part_of_elem[order]]
+    slot_of_elem = part_of_elem * stride + rank_within
+
+    return ModePlan(
+        mode=mode,
+        kappa=int(kappa),
+        rows_pp=int(rows_pp),
+        block_p=int(block_p),
+        blocks_pp=int(blocks_pp),
+        dim=int(dim),
+        row_relabel=row_relabel.astype(np.int32),
+        slot_of_elem=slot_of_elem,
+        part_nnz=part_nnz,
+    )

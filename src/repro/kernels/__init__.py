@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical hot spots (+ jnp oracles).
+
+  mttkrp_kernel  fused Hadamard + one-hot MXU segment reduction (the paper's
+                 thread-block kernel, TPU-native; DESIGN.md §2)
+  lru_scan       RG-LRU linear recurrence, VMEM-resident state
+  wkv6           RWKV-6 data-dependent-decay recurrence
+
+Validated on CPU with interpret=True against ref.py; compiled via Mosaic on
+real TPUs. ops.py wraps each with backend-aware defaults.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

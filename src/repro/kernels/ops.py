@@ -1,0 +1,43 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On a real TPU the kernels compile through Mosaic; on this CPU container we
+default to ``interpret=True`` (the kernel body runs as traced JAX ops) so
+correctness is validated end-to-end. Dry-run/roofline lowering uses the
+XLA reference paths so ``cost_analysis()`` reports honest HLO (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .mttkrp_kernel import mttkrp_fused as _mttkrp_fused
+from .lru_scan import lru_scan as _lru_scan
+from .wkv6 import wkv6 as _wkv6
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def mttkrp_fused(gathered, val, lrow, *, kappa, rows_pp, blocks_pp, block_p,
+                 interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _mttkrp_fused(gathered, val, lrow, kappa=kappa, rows_pp=rows_pp,
+                         blocks_pp=blocks_pp, block_p=block_p,
+                         interpret=interpret)
+
+
+def lru_scan(a, x, *, chunk: int = 32, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _lru_scan(a, x, chunk=chunk, interpret=interpret)
+
+
+def wkv6(r, k, w, v, u, *, chunk: int = 16, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _wkv6(r, k, w, v, u, chunk=chunk, interpret=interpret)
+
+
+__all__ = ["mttkrp_fused", "lru_scan", "wkv6", "ref"]

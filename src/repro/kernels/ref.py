@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mttkrp_fused_ref(gathered, val, lrow, *, kappa, rows_pp, blocks_pp,
+                     block_p):
+    """Oracle for kernels.mttkrp_kernel.mttkrp_fused."""
+    s = gathered.shape[0]
+    ell = jnp.prod(gathered, axis=1) * val[:, None].astype(jnp.float32)
+    stride = blocks_pp * block_p
+    part = jnp.arange(s, dtype=jnp.int32) // stride
+    gid = jnp.where(lrow < 0, 0, part * rows_pp + lrow)
+    ell = jnp.where((lrow < 0)[:, None], 0.0, ell)
+    return jax.ops.segment_sum(ell, gid, num_segments=kappa * rows_pp)
+
+
+def lru_scan_ref(a, x):
+    """Oracle for kernels.lru_scan.lru_scan: h_t = a_t h_{t-1} + x_t."""
+    a = a.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+
+    def step(h, inp):
+        at, xt = inp
+        h = at * h + xt
+        return h, h
+
+    h0 = jnp.zeros((x.shape[0], x.shape[2]), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), x.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)
+
+
+def wkv6_ref(r, k, w, v, u):
+    """Oracle for kernels.wkv6.wkv6."""
+    f32 = jnp.float32
+    r, k, w, v, u = (t.astype(f32) for t in (r, k, w, v, u))
+
+    def one_head(r, k, w, v, u):
+        def step(s, inp):
+            rt, kt, wt, vt = inp
+            kv = kt[:, None] * vt[None, :]
+            y = (rt * u) @ kv + rt @ s
+            s = wt[:, None] * s + kv
+            return s, y
+
+        s0 = jnp.zeros((r.shape[-1], v.shape[-1]), f32)
+        _, ys = jax.lax.scan(step, s0, (r, k, w, v))
+        return ys
+
+    return jax.vmap(one_head)(r, k, w, v, u)

@@ -1,0 +1,76 @@
+"""RWKV-6 (Finch) WKV recurrence Pallas TPU kernel (arXiv:2404.05892).
+
+Per head with key dim K and value dim V, data-dependent decay w_t:
+
+    y_t = (r_t . u) (k_t v_t^T) + r_t^T S_{t-1}
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+The (K, V) state matrix lives in VMEM scratch across time chunks; the grid is
+(batch*heads, time-chunks) with time innermost so each (bh) row's state
+survives its whole scan. Within a chunk the loop is statically unrolled; the
+rank-1 update k v^T and the readout r^T S are MXU-shaped contractions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _SCRATCH = lambda shape: pltpu.VMEM(shape, jnp.float32)  # noqa: E731
+except Exception:  # pragma: no cover
+    _SCRATCH = lambda shape: pl.MemorySpace.ANY  # noqa: E731
+
+
+def _wkv_kernel(r_ref, k_ref, w_ref, v_ref, u_ref, o_ref, s_ref, *,
+                chunk: int):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    s = s_ref[...]                     # (K, V) state
+    u = u_ref[...][0]                  # (K,) per-head bonus
+    for c in range(chunk):             # static unroll
+        r = r_ref[...][0, c, :]        # (K,)
+        k = k_ref[...][0, c, :]
+        w = w_ref[...][0, c, :]
+        v = v_ref[...][0, c, :]        # (V,)
+        kv = k[:, None] * v[None, :]   # (K, V) rank-1 update
+        y = jnp.dot((r * u)[None, :], kv,
+                    preferred_element_type=jnp.float32) + jnp.dot(
+            r[None, :], s, preferred_element_type=jnp.float32)
+        o_ref[0, c, :] = y[0]
+        s = w[:, None] * s + kv
+    s_ref[...] = s
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, w: jax.Array, v: jax.Array,
+         u: jax.Array, *, chunk: int = 16,
+         interpret: bool = False) -> jax.Array:
+    """r,k,w: (BH, T, K); v: (BH, T, V); u: (BH, K) -> y: (BH, T, V)."""
+    bh, t, kd = r.shape
+    vd = v.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    f32 = jnp.float32
+    return pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=chunk),
+        grid=(bh, t // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, kd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, kd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, kd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, vd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, kd), lambda b, i: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, vd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, vd), f32),
+        scratch_shapes=[_SCRATCH((kd, vd))],
+        interpret=interpret,
+    )(r.astype(f32), k.astype(f32), w.astype(f32), v.astype(f32),
+      u.astype(f32))

@@ -1,0 +1,4 @@
+"""Launchers: mesh, dry-run, train, serve."""
+from .mesh import make_mesh, make_production_mesh
+
+__all__ = ["make_mesh", "make_production_mesh"]

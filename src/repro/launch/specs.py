@@ -1,0 +1,84 @@
+"""Sharding specs for train/prefill/decode step inputs and state."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import sharding as shlib
+from ..models.common import ModelConfig
+
+
+def _dp(ctx):
+    return ctx.dp_axes if len(ctx.dp_axes) > 1 else (
+        ctx.dp_axes[0] if ctx.dp_axes else None)
+
+
+def _dp_size(ctx) -> int:
+    n = 1
+    for a in ctx.dp_axes:
+        n *= ctx.mesh.shape[a]
+    return n
+
+
+def state_shardings(state_shapes, ctx: shlib.ShardingCtx):
+    """Shardings for {"params", "opt", "step"} trees."""
+    params_sh = shlib.param_sharding_tree(state_shapes["params"], ctx)
+    repl = NamedSharding(ctx.mesh, P())
+
+    def opt_leaf(path, leaf):
+        # mirror param sharding when shapes line up (m/v); replicate extras
+        return None
+
+    opt = state_shapes["opt"]
+    out_opt = {}
+    for k, v in opt.items():
+        if k in ("m", "v"):
+            out_opt[k] = params_sh
+        elif k == "f":  # adafactor factored stats: replicate (small)
+            out_opt[k] = jax.tree.map(lambda _: repl, v)
+        else:
+            out_opt[k] = jax.tree.map(lambda _: repl, v)
+    return {"params": params_sh, "opt": out_opt, "step": repl}
+
+
+def batch_shardings(cfg: ModelConfig, batch_shapes, ctx: shlib.ShardingCtx):
+    dp = _dp(ctx)
+    mesh = ctx.mesh
+
+    def rule(path, leaf):
+        b = leaf.shape[0]
+        bdp = dp if b % _dp_size(ctx) == 0 else None
+        return NamedSharding(mesh, P(bdp, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shapes)
+
+
+def cache_shardings(cache_shapes, ctx: shlib.ShardingCtx):
+    """Decode-cache shardings: batch -> dp, KV sequence -> model axis.
+
+    Cache leaves are stacked (rep, ...). Rules by leaf name; any dim not
+    divisible by its mesh extent falls back to replication.
+    """
+    mesh = ctx.mesh
+    dp = _dp(ctx)
+    tp = ctx.tp_axis
+    dp_n = _dp_size(ctx)
+    tp_n = mesh.shape[tp] if tp else 1
+
+    def rule(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        shape = leaf.shape
+        spec = [None] * leaf.ndim
+        if name in ("k", "v") and leaf.ndim == 5:  # (rep, B, S, KV, hd)
+            if shape[1] % dp_n == 0:
+                spec[1] = dp
+            if tp and shape[2] % tp_n == 0:
+                spec[2] = tp  # sequence-sharded KV cache (flash-decode style)
+        elif name in ("state", "conv", "last", "last_c", "h") \
+                and leaf.ndim >= 2:
+            if shape[1] % dp_n == 0:
+                spec[1] = dp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)

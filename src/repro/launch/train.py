@@ -1,0 +1,63 @@
+"""End-to-end training driver.
+
+CPU-scale by default (smoke config + tiny mesh); the same code path lowers
+the production meshes (see dryrun.py). Example:
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --smoke --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from .. import sharding as shlib
+from ..configs import get_config, smoke
+from ..training import (ControllerConfig, OptimizerConfig, SyntheticLM,
+                        TrainController)
+from .mesh import make_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. '2,2' => (data=2, model=2) over local devices")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO)
+
+    cfg = smoke(args.arch) if args.smoke else get_config(args.arch)
+    ocfg = OptimizerConfig(lr=args.lr, total_steps=args.steps,
+                           warmup_steps=max(args.steps // 20, 1))
+    ctrl = ControllerConfig(ckpt_dir=args.ckpt_dir,
+                            ckpt_every=args.ckpt_every)
+    data = SyntheticLM(cfg, batch=args.batch, seq=args.seq)
+
+    ctx = None
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        axes = ("data", "model")[:len(shape)]
+        ctx = shlib.make_ctx(make_mesh(shape, axes))
+
+    with shlib.use(ctx):
+        tc = TrainController(cfg, ocfg, ctrl, data)
+        state, metrics = tc.run(args.steps)
+    print(f"done: step={int(state['step'])} "
+          f"loss={float(metrics['loss']):.4f} "
+          f"stragglers={tc.straggler_steps}")
+
+
+if __name__ == "__main__":
+    main()

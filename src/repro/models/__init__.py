@@ -1,0 +1,7 @@
+"""NN substrate: pytree modules, stage scans, block zoo."""
+from .common import ModelConfig
+from .transformer import (apply_block, decode_step, forward, init_cache,
+                          init_model)
+
+__all__ = ["ModelConfig", "forward", "decode_step", "init_model",
+           "init_cache", "apply_block"]

@@ -1,0 +1,309 @@
+"""Attention (GQA/MQA, full/sliding/prefix/cross, train + decode), MLP, RoPE.
+
+No ``while`` loops inside layer bodies (DESIGN.md roofline methodology): the
+query-chunk loop of the flash-style attention is a *Python* loop (static
+chunk count), so compiled HLO FLOPs/bytes are exact; the only scans in the
+model are the per-stage layer scans, corrected by the roofline module.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .common import ModelConfig, dense_init, rms_head_norm
+
+_NEG = -1e30
+
+# Cost-measurement mode (see DESIGN.md roofline methodology): chunk loops
+# unroll so compiled HLO FLOPs/bytes are exact. Default (False) uses
+# lax.scan so buffer assignment reuses one chunk's buffers (memory truth).
+_COST_MODE = [False]
+
+
+def set_cost_mode(flag: bool):
+    _COST_MODE[0] = bool(flag)
+
+
+def cost_mode() -> bool:
+    return _COST_MODE[0]
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); pos: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = pos[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+def init_attention(cfg: ModelConfig, key, cross: bool = False) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), cfg.pdtype),
+        "wk": dense_init(ks[1], (d, kv, hd), cfg.pdtype),
+        "wv": dense_init(ks[2], (d, kv, hd), cfg.pdtype),
+        "wo": dense_init(ks[3], (h, hd, d), cfg.pdtype,
+                         scale=1.0 / math.sqrt(h * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), cfg.pdtype)
+        p["bk"] = jnp.zeros((kv, hd), cfg.pdtype)
+        p["bv"] = jnp.zeros((kv, hd), cfg.pdtype)
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.ones((cfg.hd,), cfg.pdtype)
+        p["k_scale"] = jnp.ones((cfg.hd,), cfg.pdtype)
+    return p
+
+
+def _qkv(params, xq, xkv, cfg: ModelConfig, q_pos, kv_pos, use_rope: bool):
+    dt = cfg.cdtype
+    q = jnp.einsum("bsd,dhk->bshk", xq, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, params["wv"].astype(dt))
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    if "q_scale" in params:
+        q = rms_head_norm(q, params["q_scale"])
+        k = rms_head_norm(k, params["k_scale"])
+    if use_rope:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k = apply_rope(k, kv_pos, cfg.rope_theta)
+    q = shard(q, "dp", None, "tp", None)
+    k = shard(k, "dp", None, None, None)   # kv heads may be < tp: replicate
+    v = shard(v, "dp", None, None, None)
+    return q, k, v
+
+
+def _mask(kind: str, q_pos, k_pos, window: int, prefix_len: int):
+    """(Q, K) boolean mask from absolute positions."""
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    if kind == "bidir":
+        return jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    m = kp <= qp  # causal
+    if kind == "window":
+        m = m & (kp > qp - window)
+    elif kind == "prefix":
+        m = m | (kp < prefix_len)
+    return m
+
+
+def attention_full(params, xq, cfg: ModelConfig, *, mask: str = "causal",
+                   xkv=None, q_offset: int = 0, prefix_len: int = 0,
+                   use_rope: bool = True, q_chunk: int = 512) -> jax.Array:
+    """Training/prefill attention; Python-loop chunked over queries.
+
+    For ``mask="window"`` only the (window + chunk) KV band is touched per
+    chunk, making 32k-token hybrid prefill O(S*W) instead of O(S^2).
+    """
+    b, sq, d = xq.shape
+    xkv = xq if xkv is None else xkv
+    skv = xkv.shape[1]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h // kvh
+    q_pos_all = q_offset + jnp.arange(sq)
+    kv_pos_all = jnp.arange(skv)
+    q, k, v = _qkv(params, xq, xkv, cfg, q_pos_all, kv_pos_all, use_rope)
+    # Expand grouped KV to full heads so attention score tensors shard on
+    # the head dim over `model` (XLA keeps the broadcast virtual; GQA param
+    # and KV-cache savings are untouched — decode keeps the grouped form).
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    k = shard(k, "dp", None, "tp", None)
+    v = shard(v, "dp", None, "tp", None)
+    scale = 1.0 / math.sqrt(hd)
+
+    cq = min(q_chunk, sq)
+    n_chunks = (sq + cq - 1) // cq
+    banded = mask == "window" and skv > cfg.window + cq
+    band = cfg.window + cq
+
+    def chunk(i, lo):
+        """One q-chunk; ``lo`` may be a traced scalar (scan mode)."""
+        qc = jax.lax.dynamic_slice_in_dim(q, lo, cq, axis=1)
+        if banded:
+            start = jnp.clip(lo + q_offset - cfg.window, 0, skv - band)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            k_pos = start + jnp.arange(band)
+        else:
+            kc, vc = k, v
+            k_pos = kv_pos_all
+        logits = jnp.einsum("bqhk,bshk->bhqs", qc, kc).astype(jnp.float32)
+        logits = shard(logits, "dp", "tp", None, None)
+        logits = logits * scale
+        m = _mask(mask, q_offset + lo + jnp.arange(cq), k_pos, cfg.window,
+                  prefix_len)
+        logits = jnp.where(m[None, None], logits, _NEG)
+        probs = jax.nn.softmax(logits, axis=-1).astype(cfg.cdtype)
+        return jnp.einsum("bhqs,bshk->bqhk", probs, vc)
+
+    # flash-style recompute: probs are rebuilt in backward, never stored
+    chunk_ckpt = jax.checkpoint(chunk, static_argnums=(0,))
+
+    if n_chunks == 1 or cost_mode():
+        # unrolled: exact HLO cost for the roofline variant compiles
+        o = jnp.concatenate(
+            [chunk_ckpt(i, i * cq) for i in range(n_chunks)], axis=1)
+    else:
+        # scanned: one chunk's buffers live at a time (memory truth)
+        def body(_, i):
+            return None, chunk_ckpt(0, i * cq)
+
+        _, oc = jax.lax.scan(body, None, jnp.arange(n_chunks))
+        o = jnp.moveaxis(oc, 0, 1).reshape(b, sq, h, hd)
+    o = shard(o, "dp", None, "tp", None)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(cfg.cdtype))
+
+
+def attention_decode(params, xq, cache: dict, cfg: ModelConfig, *,
+                     mask: str = "causal", use_rope: bool = True,
+                     cross: bool = False):
+    """Single-token decode. cache: {"k","v": (B, Smax, KV, hd), "len": ()}.
+
+    Self-attn writes the new KV at position ``len`` (ring-buffer modulo for
+    windowed layers); cross-attn reads a precomputed encoder cache.
+    """
+    b, _, d = xq.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h // kvh
+    dt = cfg.cdtype
+    pos = cache["len"]
+    smax = cache["k"].shape[1]
+
+    q = jnp.einsum("bsd,dhk->bshk", xq, params["wq"].astype(dt))
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+    if "q_scale" in params:
+        q = rms_head_norm(q, params["q_scale"])
+    if use_rope:
+        q = apply_rope(q, jnp.full((b, 1), pos), cfg.rope_theta)
+
+    if cross:
+        k, v = cache["k"], cache["v"]
+        valid = jnp.arange(smax) < cache.get("kv_len", smax)
+        new_cache = cache
+    else:
+        knew = jnp.einsum("bsd,dhk->bshk", xq, params["wk"].astype(dt))
+        vnew = jnp.einsum("bsd,dhk->bshk", xq, params["wv"].astype(dt))
+        if "bk" in params:
+            knew = knew + params["bk"].astype(dt)
+            vnew = vnew + params["bv"].astype(dt)
+        if "k_scale" in params:
+            knew = rms_head_norm(knew, params["k_scale"])
+        if use_rope:
+            knew = apply_rope(knew, jnp.full((b, 1), pos), cfg.rope_theta)
+        slot = pos % smax if mask == "window" else pos
+        if "k_scale" in cache:  # int8 KV cache
+            kq, ks = _quantize_rows(knew)
+            vq, vs = _quantize_rows(vnew)
+            new_cache = {
+                **cache,
+                "k": jax.lax.dynamic_update_slice(cache["k"], kq,
+                                                  (0, slot, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(cache["v"], vq,
+                                                  (0, slot, 0, 0)),
+                "k_scale": jax.lax.dynamic_update_slice(
+                    cache["k_scale"], ks, (0, slot, 0, 0)),
+                "v_scale": jax.lax.dynamic_update_slice(
+                    cache["v_scale"], vs, (0, slot, 0, 0)),
+                "len": pos + 1,
+            }
+            k = (new_cache["k"].astype(jnp.float32)
+                 * new_cache["k_scale"]).astype(dt)
+            v = (new_cache["v"].astype(jnp.float32)
+                 * new_cache["v_scale"]).astype(dt)
+        else:
+            k = jax.lax.dynamic_update_slice(cache["k"], knew.astype(dt),
+                                             (0, slot, 0, 0))
+            v = jax.lax.dynamic_update_slice(cache["v"], vnew.astype(dt),
+                                             (0, slot, 0, 0))
+            new_cache = {**cache, "k": k, "v": v, "len": pos + 1}
+        if mask == "window":  # ring buffer: all slots < len are valid
+            valid = jnp.arange(smax) < jnp.minimum(pos + 1, smax)
+        else:
+            valid = jnp.arange(smax) <= pos
+
+    qg = q.reshape(b, 1, kvh, g, hd)
+    logits = jnp.einsum("bqngh,bsnh->bngqs", qg, k).astype(jnp.float32)
+    logits = logits / math.sqrt(hd)
+    logits = jnp.where(valid[None, None, None, None, :], logits, _NEG)
+    probs = jax.nn.softmax(logits, axis=-1).astype(dt)
+    o = jnp.einsum("bngqs,bsnh->bqngh", probs, v).reshape(b, 1, h, hd)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+    return out, new_cache
+
+
+def make_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
+                    windowed: bool = False) -> dict:
+    size = min(max_len, cfg.window) if windowed and cfg.window else max_len
+    shape = (batch, size, cfg.n_kv_heads, cfg.hd)
+    if cfg.kv_quant:  # int8 rows + per-(pos, head) scales (§Perf lever)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:3] + (1,), jnp.float32),
+                "v_scale": jnp.zeros(shape[:3] + (1,), jnp.float32),
+                "len": jnp.zeros((), jnp.int32)}
+    return {"k": jnp.zeros(shape, cfg.cdtype),
+            "v": jnp.zeros(shape, cfg.cdtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def _quantize_rows(x):
+    """x (B, 1, KV, hd) -> int8 rows + f32 scales."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+def init_mlp(cfg: ModelConfig, key, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act in ("swiglu", "geglu"):
+        return {"w_gate": dense_init(ks[0], (d, f), cfg.pdtype),
+                "w_up": dense_init(ks[1], (d, f), cfg.pdtype),
+                "w_down": dense_init(ks[2], (f, d), cfg.pdtype)}
+    return {"w_up": dense_init(ks[0], (d, f), cfg.pdtype),
+            "w_down": dense_init(ks[1], (f, d), cfg.pdtype)}
+
+
+def apply_mlp(params, x, cfg: ModelConfig):
+    dt = cfg.cdtype
+    up = x @ params["w_up"].astype(dt)
+    up = shard(up, "dp", None, "tp")
+    if "w_gate" in params:
+        gate = x @ params["w_gate"].astype(dt)
+        gate = shard(gate, "dp", None, "tp")
+        h = (jax.nn.silu(gate) if cfg.act == "swiglu"
+             else jax.nn.gelu(gate)) * up
+    else:
+        h = jax.nn.gelu(up)
+    out = h @ params["w_down"].astype(dt)
+    return shard(out, "dp", None, None)

@@ -1,0 +1,109 @@
+"""Griffin / RecurrentGemma recurrent block (RG-LRU, arXiv:2402.19427).
+
+Branches: gate = gelu(x W_gate); rec = RG-LRU(conv1d(x W_rec)); out =
+(gate * rec) W_out. The RG-LRU recurrence
+
+    r_t = sigmoid(u_t W_a + b_a);  i_t = sigmoid(u_t W_x + b_x)
+    a_t = exp(-c * softplus(Lambda) * r_t)            (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+is evaluated with ``lax.associative_scan`` in training/prefill (log-depth,
+no while loop -> exact HLO cost; DESIGN.md roofline methodology) and with a
+single fused step in decode. The Pallas ``lru_scan`` kernel is the
+TPU-kernel variant used by the serving engine.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .common import ModelConfig, dense_init
+
+_C = 8.0
+
+
+def init_rglru(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in_rec": dense_init(ks[0], (d, w), cfg.pdtype),
+        "w_in_gate": dense_init(ks[1], (d, w), cfg.pdtype),
+        "conv_w": dense_init(ks[2], (cfg.conv_width, w), cfg.pdtype),
+        "conv_b": jnp.zeros((w,), cfg.pdtype),
+        "w_a": dense_init(ks[3], (w, w), cfg.pdtype),
+        "b_a": jnp.zeros((w,), cfg.pdtype),
+        "w_x": dense_init(ks[4], (w, w), cfg.pdtype),
+        "b_x": jnp.zeros((w,), cfg.pdtype),
+        # Lambda parameterized so a in ~(0.9, 0.999) at init
+        "lam": jnp.asarray(
+            jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)),
+        "w_out_rec": dense_init(ks[6], (w, d), cfg.pdtype),
+    }
+
+
+def _gates(params, u, cfg: ModelConfig):
+    dt = cfg.cdtype
+    r = jax.nn.sigmoid(u @ params["w_a"].astype(dt)
+                       + params["b_a"].astype(dt)).astype(jnp.float32)
+    i = jax.nn.sigmoid(u @ params["w_x"].astype(dt)
+                       + params["b_x"].astype(dt)).astype(jnp.float32)
+    log_lam = jnp.log(params["lam"].astype(jnp.float32))  # < 0
+    log_a = _C * log_lam * r              # softplus folded into lam param
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * u.astype(jnp.float32)
+    return a, b
+
+
+def _conv1d(params, u, cfg: ModelConfig, state=None):
+    """Causal depthwise conv along time; state: last (width-1) inputs."""
+    wt = params["conv_w"].astype(u.dtype)
+    width = wt.shape[0]
+    if state is None:
+        pads = jnp.zeros((u.shape[0], width - 1, u.shape[2]), u.dtype)
+    else:
+        pads = state.astype(u.dtype)
+    xp = jnp.concatenate([pads, u], axis=1)
+    out = sum(xp[:, i:i + u.shape[1], :] * wt[i] for i in range(width))
+    new_state = xp[:, -(width - 1):, :]
+    return out + params["conv_b"].astype(u.dtype), new_state
+
+
+def apply_rglru(params, x, cfg: ModelConfig):
+    """Full-sequence path; x: (B, S, D)."""
+    dt = cfg.cdtype
+    gate = jax.nn.gelu(x @ params["w_in_gate"].astype(dt))
+    gate = shard(gate, "dp", None, "tp")
+    u = x @ params["w_in_rec"].astype(dt)
+    u = shard(u, "dp", None, "tp")
+    u, _ = _conv1d(params, u, cfg)
+    a, b = _gates(params, u, cfg)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(dt)
+    out = (h * gate) @ params["w_out_rec"].astype(dt)
+    return shard(out, "dp", None, None)
+
+
+def apply_rglru_decode(params, x, cache: dict, cfg: ModelConfig):
+    """Single-token step; cache: {"h": (B, W), "conv": (B, width-1, W)}."""
+    dt = cfg.cdtype
+    gate = jax.nn.gelu(x @ params["w_in_gate"].astype(dt))  # (B, 1, W)
+    u = x @ params["w_in_rec"].astype(dt)
+    u, conv_state = _conv1d(params, u, cfg, state=cache["conv"])
+    a, b = _gates(params, u, cfg)                  # (B, 1, W) f32
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    out = (h[:, None, :].astype(dt) * gate) @ params["w_out_rec"].astype(dt)
+    return out, {"h": h, "conv": conv_state}
+
+
+def make_rglru_cache(cfg: ModelConfig, batch: int) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, w), cfg.cdtype)}

@@ -1,0 +1,198 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): data-dependent-decay time-mix +
+squared-ReLU channel-mix.
+
+Training/prefill uses the chunked linear-attention algebra (GLA-style): per
+chunk of length c, intra-chunk terms are (c x c) masked matmuls and the
+(hd x hd) per-head state crosses chunks in a *Python* loop (static chunk
+count, no while loop -> exact HLO costs). Decays are normalized to the chunk
+end so every materialized exponential is <= exp(sum |log w| over one chunk)
+— safe for the RWKV init regime (w0 ≈ -5 ⇒ per-step log-decay ≈ -7e-3).
+
+Decode runs the exact recurrence with the (hd_k x hd_v) state cached; the
+``wkv6`` Pallas kernel is the TPU serving path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .common import ModelConfig, dense_init
+
+HEAD_DIM = 64
+LORA_DIM = 64
+
+
+def n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // HEAD_DIM
+
+
+def init_rwkv_block(cfg: ModelConfig, key) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    h = n_heads(cfg)
+    ks = jax.random.split(key, 10)
+    return {
+        # time-mix
+        "mu": jnp.full((5, d), 0.5, cfg.pdtype),          # r,k,v,g,w shifts
+        "wr": dense_init(ks[0], (d, d), cfg.pdtype),
+        "wk_t": dense_init(ks[1], (d, d), cfg.pdtype),
+        "wv_t": dense_init(ks[2], (d, d), cfg.pdtype),
+        "wg": dense_init(ks[3], (d, d), cfg.pdtype),
+        "w0": jnp.full((d,), -5.0, jnp.float32),          # decay bias
+        "wa_lora": dense_init(ks[4], (d, LORA_DIM), cfg.pdtype),
+        "wb_lora": jnp.zeros((LORA_DIM, d), cfg.pdtype),  # zero-init lora out
+        "u": dense_init(ks[5], (h, HEAD_DIM), jnp.float32, scale=0.5),
+        "ln_x": jnp.ones((d,), cfg.pdtype),               # per-head norm
+        "w_out_t": dense_init(ks[6], (d, d), cfg.pdtype),
+        # channel-mix
+        "mu_c": jnp.full((2, d), 0.5, cfg.pdtype),        # k, r shifts
+        "wk_c": dense_init(ks[7], (d, f), cfg.pdtype),
+        "wv_c": dense_init(ks[8], (f, d), cfg.pdtype),
+        "wr_c": dense_init(ks[9], (d, d), cfg.pdtype),
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / cached last token at t=0)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu_row):
+    return x + mu_row.astype(x.dtype) * (xs - x)
+
+
+def _decay(params, xw, cfg: ModelConfig):
+    """log w_t = -exp(w0 + tanh(x W_a) W_b)  (negative, data-dependent)."""
+    dt = cfg.cdtype
+    lora = jnp.tanh(xw @ params["wa_lora"].astype(dt)) \
+        @ params["wb_lora"].astype(dt)
+    raw = params["w0"].astype(jnp.float32) + lora.astype(jnp.float32)
+    return -jnp.exp(raw)
+
+
+def _heads(x, h):
+    b, s, d = x.shape
+    return x.reshape(b, s, h, HEAD_DIM).transpose(0, 2, 1, 3)  # (B,H,S,hd)
+
+
+def _headnorm(y, scale, h):
+    """Per-head RMS norm over hd (stand-in for RWKV's GroupNorm)."""
+    b, hh, s, hd = y.shape
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+    yf = yf.transpose(0, 2, 1, 3).reshape(b, s, hh * hd)
+    return yf * scale.astype(jnp.float32)
+
+
+def time_mix(params, x, cfg: ModelConfig, chunk: int | None = None):
+    """Full-sequence WKV6; x: (B, S, D)."""
+    b, s, d = x.shape
+    if chunk is None:  # bound the unrolled chunk count (cost-mode compiles)
+        chunk = 32 if s <= 512 else 256
+    h = n_heads(cfg)
+    dt = cfg.cdtype
+    xs = _shift(x)
+    r = _mix(x, xs, params["mu"][0]) @ params["wr"].astype(dt)
+    k = _mix(x, xs, params["mu"][1]) @ params["wk_t"].astype(dt)
+    v = _mix(x, xs, params["mu"][2]) @ params["wv_t"].astype(dt)
+    g = _mix(x, xs, params["mu"][3]) @ params["wg"].astype(dt)
+    lw = _decay(params, _mix(x, xs, params["mu"][4]), cfg)  # (B,S,D) f32
+
+    r, k, v = (_heads(t, h).astype(jnp.float32) for t in (r, k, v))
+    lw = _heads(lw, h)
+    u = params["u"].astype(jnp.float32)                      # (H, hd)
+
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+    state0 = jnp.zeros((b, h, HEAD_DIM, HEAD_DIM), jnp.float32)
+
+    def one_chunk(state, inp):
+        rc, kc, vc, lwc = inp                # (B, H, c, hd) each
+        e = jnp.cumsum(lwc, axis=2)          # inclusive
+        ce = e - lwc                         # exclusive
+        e_end = e[:, :, -1:, :]
+        r_in = rc * jnp.exp(ce)              # exponents <= 0: safe
+        y_inter = jnp.einsum("bhck,bhkv->bhcv", r_in, state)
+        k2 = kc * jnp.exp(e_end - e)         # <= 0: safe
+        r3 = rc * jnp.exp(ce - e_end)        # bounded by chunk decay mass
+        scores = jnp.einsum("bhck,bhsk->bhcs", r3, k2)
+        mask = jnp.tril(jnp.ones((c, c), bool), k=-1)        # strict s < t
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        y_intra = jnp.einsum("bhcs,bhsv->bhcv", scores, vc)
+        coef = jnp.einsum("bhck,hk->bhc", rc * kc, u)        # bonus s == t
+        y_bonus = coef[..., None] * vc
+        new_state = jnp.exp(e_end)[..., 0, :, None] * state + \
+            jnp.einsum("bhsk,bhsv->bhkv", k2, vc)
+        return new_state, y_inter + y_intra + y_bonus
+
+    def chunked(t):  # (B, H, S, hd) -> (nc, B, H, c, hd)
+        return jnp.moveaxis(
+            t.reshape(b, h, nc, c, HEAD_DIM), 2, 0)
+
+    xs = (chunked(r), chunked(k), chunked(v), chunked(lw))
+    from .layers import cost_mode
+    one_chunk_ckpt = jax.checkpoint(one_chunk)  # rebuild intra-chunk mats
+    if cost_mode():  # unrolled: exact HLO cost for roofline variants
+        state, ys = state0, []
+        for i in range(nc):
+            state, yc = one_chunk_ckpt(state,
+                                       jax.tree.map(lambda t: t[i], xs))
+            ys.append(yc)
+        y = jnp.concatenate(ys, axis=2)
+    else:            # scanned: one chunk's buffers live at a time
+        _, ys = jax.lax.scan(one_chunk_ckpt, state0, xs)
+        y = jnp.moveaxis(ys, 0, 2).reshape(b, h, s, HEAD_DIM)
+    y = _headnorm(y, params["ln_x"], h).astype(dt)
+    out = (y * jax.nn.silu(g)) @ params["w_out_t"].astype(dt)
+    return shard(out, "dp", None, None)
+
+
+def time_mix_decode(params, x, cache, cfg: ModelConfig):
+    """x: (B, 1, D); cache: {"state": (B,H,hd,hd), "last": (B,1,D)}."""
+    b, _, d = x.shape
+    h = n_heads(cfg)
+    dt = cfg.cdtype
+    xs = cache["last"].astype(x.dtype)
+    r = _mix(x, xs, params["mu"][0]) @ params["wr"].astype(dt)
+    k = _mix(x, xs, params["mu"][1]) @ params["wk_t"].astype(dt)
+    v = _mix(x, xs, params["mu"][2]) @ params["wv_t"].astype(dt)
+    g = _mix(x, xs, params["mu"][3]) @ params["wg"].astype(dt)
+    lw = _decay(params, _mix(x, xs, params["mu"][4]), cfg)
+
+    rh = r.reshape(b, h, HEAD_DIM).astype(jnp.float32)
+    kh = k.reshape(b, h, HEAD_DIM).astype(jnp.float32)
+    vh = v.reshape(b, h, HEAD_DIM).astype(jnp.float32)
+    wh = jnp.exp(lw.reshape(b, h, HEAD_DIM))
+    u = params["u"].astype(jnp.float32)
+    s0 = cache["state"]
+    kv = kh[..., :, None] * vh[..., None, :]                 # (B,H,hd,hd)
+    y = jnp.einsum("bhk,bhkv->bhv", rh * u[None], kv) \
+        + jnp.einsum("bhk,bhkv->bhv", rh, s0)
+    state = wh[..., :, None] * s0 + kv
+    y = _headnorm(y[:, :, None, :], params["ln_x"], h).astype(dt)
+    out = (y * jax.nn.silu(g)) @ params["w_out_t"].astype(dt)
+    return out, {"state": state, "last": x}
+
+
+def channel_mix(params, x, cfg: ModelConfig, last=None):
+    dt = cfg.cdtype
+    xs = _shift(x, last)
+    xk = _mix(x, xs, params["mu_c"][0])
+    xr = _mix(x, xs, params["mu_c"][1])
+    kk = jnp.square(jax.nn.relu(xk @ params["wk_c"].astype(dt)))
+    kk = shard(kk, "dp", None, "tp")
+    out = jax.nn.sigmoid(xr @ params["wr_c"].astype(dt)) * \
+        (kk @ params["wv_c"].astype(dt))
+    return shard(out, "dp", None, None)
+
+
+def make_rwkv_cache(cfg: ModelConfig, batch: int) -> dict:
+    h = n_heads(cfg)
+    return {
+        "state": jnp.zeros((batch, h, HEAD_DIM, HEAD_DIM), jnp.float32),
+        "last": jnp.zeros((batch, 1, cfg.d_model), cfg.cdtype),
+        "last_c": jnp.zeros((batch, 1, cfg.d_model), cfg.cdtype),
+    }

@@ -1,0 +1,4 @@
+"""Serving: batched prefill/decode engine over the unified cache."""
+from .engine import Engine, ServeConfig
+
+__all__ = ["Engine", "ServeConfig"]

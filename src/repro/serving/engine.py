@@ -1,0 +1,76 @@
+"""Batched serving engine: prefill + decode over the unified cache.
+
+The decode step is a single jit (the artifact the decode_* dry-run cells
+lower); prefill teacher-forces the prompt through the same step so every
+cache layout (KV ring buffers, recurrent states, cross-attention memories)
+is exercised by one code path. Whisper requests first build the encoder
+memory via ``build_cross_caches``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import decode_step, init_cache
+from ..models import transformer
+from ..models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch: int
+    max_len: int
+    temperature: float = 0.0    # 0 => greedy
+    eos_id: int = -1            # -1 => never stop early
+
+
+class Engine:
+    def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig,
+                 enc_embeds: Optional[jax.Array] = None):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.cache = init_cache(
+            cfg, scfg.batch, scfg.max_len,
+            enc_len=enc_embeds.shape[1] if enc_embeds is not None else 0)
+        if cfg.n_enc_layers:
+            assert enc_embeds is not None, "audio arch needs encoder input"
+            self.cache = transformer.build_cross_caches(
+                params, cfg, enc_embeds, self.cache)
+        self._step = jax.jit(
+            lambda p, c, t: decode_step(p, c, self.cfg, t))
+
+    def prefill(self, prompt: jax.Array) -> jax.Array:
+        """prompt: (B, P) int32. Returns logits of the last position."""
+        logits = None
+        for t in range(prompt.shape[1]):
+            logits, self.cache = self._step(self.params, self.cache,
+                                            prompt[:, t:t + 1])
+        return logits
+
+    def _sample(self, logits, key):
+        lf = logits[:, -1, :self.cfg.vocab].astype(jnp.float32)
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(lf, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, lf / self.scfg.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompt: jax.Array, max_new: int,
+                 key: Optional[jax.Array] = None) -> jax.Array:
+        """Greedy/temperature decode; returns (B, max_new) tokens."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        logits = self.prefill(prompt)
+        outs = []
+        done = jnp.zeros((prompt.shape[0],), bool)
+        for i in range(max_new):
+            key, sub = jax.random.split(key)
+            nxt = self._sample(logits, sub)
+            nxt = jnp.where(done, 0, nxt)
+            outs.append(nxt)
+            done = done | (nxt == self.scfg.eos_id)
+            logits, self.cache = self._step(self.params, self.cache,
+                                            nxt[:, None])
+        return jnp.stack(outs, axis=1)

@@ -1,0 +1,176 @@
+"""Mesh/sharding context + parameter partitioning rules.
+
+Axis convention (DESIGN.md §6):
+  dp axes  — ("pod", "data") when present: batch / fsdp shards
+  tp axis  — "model": heads, d_ff, experts, vocab shards
+
+Models call ``shard(x, *dims)`` with logical dim tags; outside a mesh context
+this is a no-op, so the same code runs in single-device tests and 512-chip
+lowering. Tags: "dp" (batch), "tp" (model-parallel dim), None.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    mesh: Mesh
+    dp_axes: tuple[str, ...]      # e.g. ("data",) or ("pod", "data")
+    tp_axis: Optional[str]        # "model"
+    fsdp: bool = True             # shard params/opt-state over dp too
+
+    def resolve(self, *tags) -> P:
+        spec = []
+        for t in tags:
+            if t == "dp":
+                spec.append(self.dp_axes if len(self.dp_axes) > 1
+                            else self.dp_axes[0] if self.dp_axes else None)
+            elif t == "tp":
+                spec.append(self.tp_axis)
+            else:
+                spec.append(None)
+        return P(*spec)
+
+    def named(self, *tags) -> NamedSharding:
+        return NamedSharding(self.mesh, self.resolve(*tags))
+
+
+_CTX: contextvars.ContextVar[Optional[ShardingCtx]] = contextvars.ContextVar(
+    "sharding_ctx", default=None)
+
+
+def current() -> Optional[ShardingCtx]:
+    return _CTX.get()
+
+
+@contextlib.contextmanager
+def use(ctx: Optional[ShardingCtx]):
+    tok = _CTX.set(ctx)
+    try:
+        yield ctx
+    finally:
+        _CTX.reset(tok)
+
+
+def make_ctx(mesh: Mesh, fsdp: bool = True) -> ShardingCtx:
+    names = mesh.axis_names
+    dp = tuple(n for n in names if n in ("pod", "data"))
+    tp = "model" if "model" in names else None
+    return ShardingCtx(mesh=mesh, dp_axes=dp, tp_axis=tp, fsdp=fsdp)
+
+
+def shard(x, *tags):
+    """Attach a sharding constraint if a mesh context is active.
+
+    Tags on dims not divisible by their mesh extent are dropped (replicated)
+    so the same model code serves any (arch x mesh) combination.
+    """
+    ctx = current()
+    if ctx is None:
+        return x
+    if len(tags) != x.ndim:
+        raise ValueError(f"{len(tags)} tags for rank-{x.ndim} array")
+    fixed = []
+    for d, t in enumerate(tags):
+        if t is None:
+            fixed.append(None)
+            continue
+        spec = ctx.resolve(t)[0]
+        axes = spec if isinstance(spec, tuple) else (spec,)
+        size = 1
+        for a in axes:
+            if a is not None:
+                size *= ctx.mesh.shape[a]
+        fixed.append(t if size and x.shape[d] % size == 0 else None)
+    return jax.lax.with_sharding_constraint(x, ctx.named(*fixed))
+
+
+# --------------------------------------------------------------------------
+# Parameter partitioning rules (path-pattern -> dim tags).
+# Params are stacked (L, ...) per stage; dim 0 of layer params is the scan
+# axis (never sharded). "fsdp" tags shard over dp when ctx.fsdp is set.
+# --------------------------------------------------------------------------
+def param_tags(path: tuple[str, ...], shape: tuple[int, ...], ctx:
+               ShardingCtx) -> tuple:
+    """Heuristic rules keyed on leaf names; returns one tag per dim."""
+    name = path[-1]
+    stacked = path[0].startswith("stage") or path[0] in ("enc", "dec")
+    lead = ("layer",) if stacked else ()
+    body = shape[len(lead):]
+    fsdp = "dp" if ctx.fsdp else None
+
+    def tags(*t):
+        return tuple([None] * len(lead)) + t
+
+    # embed/head: single-dim sharding only — a 2D-sharded gather operand
+    # triggers SPMD "involuntary full rematerialization" (table replication)
+    if name in ("embed",):                      # (V, D)
+        return ("tp", None)
+    if name in ("head",):                       # (D, V)
+        return (None, "tp")
+    if name in ("wq", "wk", "wv"):              # (D, H, hd) or (D, KVH, hd)
+        return tags(fsdp, "tp", None) if body[1] % _tp(ctx) == 0 \
+            else tags(fsdp, None, None)
+    if name == "wo":                            # (H, hd, D)
+        return tags("tp", None, fsdp) if body[0] % _tp(ctx) == 0 \
+            else tags(None, None, fsdp)
+    if name in ("w_gate", "w_up"):              # (D, F) or (E, D, F)
+        if len(body) == 3:
+            return tags("tp", fsdp, None)       # experts over tp
+        return tags(fsdp, "tp")
+    if name == "w_down":                        # (F, D) or (E, F, D)
+        if len(body) == 3:
+            return tags("tp", None, fsdp)
+        return tags("tp", fsdp)
+    if name == "router":                        # (D, E)
+        return tags(fsdp, None)
+    if name in ("w_in_rec", "w_in_gate"):       # (D, W) rg-lru projections
+        return tags(fsdp, "tp")
+    if name == "w_out_rec":                     # (W, D)
+        return tags("tp", fsdp)
+    if name in ("wr", "wk_t", "wv_t", "wg", "w_out_t"):  # rwkv (D, D)
+        return tags(fsdp, "tp") if name != "w_out_t" else tags("tp", fsdp)
+    if name in ("wk_c", ):                      # rwkv channel (D, F)
+        return tags(fsdp, "tp")
+    if name in ("wv_c", ):                      # (F, D)
+        return tags("tp", fsdp)
+    # biases, norms, gates, small tables: replicate
+    return tags(*([None] * len(body)))
+
+
+def _tp(ctx: ShardingCtx) -> int:
+    if ctx.tp_axis is None:
+        return 1
+    return ctx.mesh.shape[ctx.tp_axis]
+
+
+def param_sharding_tree(params, ctx: ShardingCtx):
+    """Map a params pytree to NamedShardings via param_tags."""
+    def visit(path, leaf):
+        keys = tuple(getattr(p, "key", getattr(p, "idx", None))
+                     for p in path)
+        keys = tuple(str(k) for k in keys)
+        tags = param_tags(keys, leaf.shape, ctx)
+        # guard: only shard dims divisible by the mesh extent
+        fixed = []
+        for d, t in enumerate(tags):
+            if t is None:
+                fixed.append(None)
+                continue
+            spec = ctx.resolve(t)[0]
+            axes = spec if isinstance(spec, tuple) else (spec,)
+            size = 1
+            for a in axes:
+                if a is not None:
+                    size *= ctx.mesh.shape[a]
+            fixed.append(t if leaf.shape[d] % size == 0 else None)
+        return ctx.named(*fixed)
+
+    return jax.tree_util.tree_map_with_path(visit, params)

@@ -1,0 +1,6 @@
+"""Paper technique as LM features: CPD embeddings, low-rank grad compression."""
+from .cpd_embedding import (cpd_embed, cpd_logits, dense_table,
+                            init_cpd_embedding, split_dims)
+
+__all__ = ["cpd_embed", "cpd_logits", "dense_table", "init_cpd_embedding",
+           "split_dims"]

@@ -1,0 +1,111 @@
+"""CPD-factorized embedding layer — the paper's kernel as an LM feature.
+
+The (V, D) table is represented as a rank-R CPD of its (V1 x V2 x D)
+reshaping:  E[v1*V2 + v2, :] = C @ (A[v1] * B[v2])^T, with
+A (V1, R), B (V2, R), C (D, R). Storage drops from V*D to (V1+V2+D)*R.
+
+The factor gradients for a token batch are *exactly* an spMTTKRP where the
+batch plays the sparse tensor (DESIGN.md §4): viewing the batch as the
+3-mode sparse tensor X in R^{V1 x V2 x T} with nonzeros (v1_t, v2_t, t),
+
+    dA = X_(0) (B  (.) GC)      (mode-0 spMTTKRP, GC = cotangent @ C)
+    dB = X_(1) (A  (.) GC)
+    dC = G^T (A[v1] * B[v2])    (dense)
+
+implemented below with the same gather-Hadamard-segment-sum elementwise
+computation as core.mttkrp (Alg. 2). Token indices are dynamic, so the
+runtime path uses the segment-sum form; the host-side FLYCOO partitioner
+applies when batches are statically sorted (serving).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def split_dims(vocab: int) -> tuple[int, int]:
+    v1 = int(math.ceil(math.sqrt(vocab)))
+    v2 = int(math.ceil(vocab / v1))
+    return v1, v2
+
+
+def init_cpd_embedding(key, vocab: int, d_model: int, rank: int,
+                       dtype=jnp.float32) -> dict:
+    v1, v2 = split_dims(vocab)
+    ka, kb, kc = jax.random.split(key, 3)
+    s = (1.0 / rank) ** 0.5
+    return {
+        "A": (jax.random.normal(ka, (v1, rank)) * s).astype(dtype),
+        "B": (jax.random.normal(kb, (v2, rank)) * s).astype(dtype),
+        "C": (jax.random.normal(kc, (d_model, rank)) * s).astype(dtype),
+    }
+
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def cpd_embed(params, tokens):
+    """tokens (B, S) -> embeddings (B, S, D)."""
+    out, _ = _fwd(params, tokens)
+    return out
+
+
+def _lookup(params, tokens):
+    v2 = params["B"].shape[0]
+    i1 = tokens // v2
+    i2 = tokens % v2
+    a = jnp.take(params["A"], i1, axis=0)   # (B, S, R)
+    b = jnp.take(params["B"], i2, axis=0)
+    return (a * b) @ params["C"].T, (i1, i2, a, b)
+
+
+def _fwd(params, tokens):
+    out, res = _lookup(params, tokens)
+    return out, (params, tokens, res)
+
+
+def _bwd(resids, g):
+    params, tokens, (i1, i2, a, b) = resids
+    bsz, seq, d = g.shape
+    t = bsz * seq
+    gf = g.reshape(t, d).astype(jnp.float32)
+    gc = gf @ params["C"]                       # (T, R): mode-T "factor"
+    af = a.reshape(t, -1).astype(jnp.float32)
+    bf = b.reshape(t, -1).astype(jnp.float32)
+    # --- spMTTKRP elementwise computation (Alg. 2): gather-Hadamard done,
+    # segment-sum = the ownership-partitioned accumulation. ---
+    dA = jax.ops.segment_sum(bf * gc, i1.reshape(t),
+                             num_segments=params["A"].shape[0])
+    dB = jax.ops.segment_sum(af * gc, i2.reshape(t),
+                             num_segments=params["B"].shape[0])
+    dC = gf.T @ (af * bf)
+    dparams = {"A": dA.astype(params["A"].dtype),
+               "B": dB.astype(params["B"].dtype),
+               "C": dC.astype(params["C"].dtype)}
+    return dparams, None
+
+
+cpd_embed.defvjp(_fwd, _bwd)
+
+
+def cpd_logits(params, x):
+    """Tied-head logits without materializing the dense table:
+    logits[t, v] = sum_r (x_t . C[:, r]) A[v1, r] B[v2, r]."""
+    v1 = params["A"].shape[0]
+    v2 = params["B"].shape[0]
+    vocab = v1 * v2
+    xc = x @ params["C"].astype(x.dtype)         # (B, S, R)
+    ids = jnp.arange(vocab)
+    krp = (jnp.take(params["A"], ids // v2, axis=0)
+           * jnp.take(params["B"], ids % v2, axis=0))
+    return xc @ krp.T.astype(x.dtype)
+
+
+def dense_table(params) -> jax.Array:
+    """Materialize E (tests / comparison only)."""
+    v1, r = params["A"].shape
+    v2 = params["B"].shape[0]
+    krp = (params["A"][:, None, :] * params["B"][None, :, :]).reshape(
+        v1 * v2, r)
+    return krp @ params["C"].T

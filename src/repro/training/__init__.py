@@ -1,0 +1,10 @@
+"""Training substrate: optimizer, loop, checkpointing, data, compression."""
+from .optimizer import OptimizerConfig
+from .train_loop import (ControllerConfig, TrainController, init_state,
+                         make_loss_fn, make_train_step, softmax_xent)
+from .checkpoint import CheckpointManager
+from .data import SyntheticLM
+
+__all__ = ["OptimizerConfig", "ControllerConfig", "TrainController",
+           "init_state", "make_loss_fn", "make_train_step", "softmax_xent",
+           "CheckpointManager", "SyntheticLM"]

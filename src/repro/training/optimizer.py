@@ -1,0 +1,145 @@
+"""Optimizers (AdamW, Adafactor), global-norm clipping, LR schedules.
+
+Own implementation (optax is not vendored here). State dtypes are
+configurable: the >=100B configs can run bf16 moments to fit HBM
+(reported by the dry-run's memory_analysis either way).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    state_dtype: str = "float32"   # moment dtype (bf16 for the giants)
+
+
+def schedule(cfg: OptimizerConfig, step):
+    """Linear warmup -> cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), grads), g
+
+
+# ------------------------------------------------------------------- adamw
+def adamw_init(params, cfg: OptimizerConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, opt_state, params, cfg: OptimizerConfig):
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # no decay on norms/biases/1-d tables
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return (newp.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype))
+
+    flat = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], params)
+    new_params = jax.tree.map(lambda x: x[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda x: x[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda x: x[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, lr
+
+
+# ---------------------------------------------------------------- adafactor
+def adafactor_init(params, cfg: OptimizerConfig):
+    def rows_cols(p):
+        if p.ndim >= 2:
+            return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"f": jax.tree.map(rows_cols, params,
+                              is_leaf=lambda x: not isinstance(x, dict)),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, opt_state, params, cfg: OptimizerConfig):
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(g, f, p):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + 1e-30
+        if p.ndim >= 2:
+            r = beta * f["r"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            c = beta * f["c"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = jnp.sqrt(
+                r[..., None] * c[..., None, :]
+                / (jnp.mean(r, axis=-1, keepdims=True)[..., None] + 1e-30))
+            newf = {"r": r, "c": c}
+        else:
+            v = beta * f["v"] + (1 - beta) * g2
+            denom = jnp.sqrt(v)
+            newf = {"v": v}
+        delta = gf / (denom + 1e-30)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), newf
+
+    is_state = lambda x: isinstance(x, dict) and ("r" in x or "v" in x)  # noqa
+    flat = jax.tree.map(upd, grads, opt_state["f"], params, is_leaf=None)
+    new_params = jax.tree.map(lambda x: x[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_f = jax.tree.map(lambda x: x[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"f": new_f, "step": step}, lr
+
+
+def init(params, cfg: OptimizerConfig):
+    if cfg.name == "adafactor":
+        return adafactor_init(params, cfg)
+    return adamw_init(params, cfg)
+
+
+def update(grads, opt_state, params, cfg: OptimizerConfig):
+    if cfg.name == "adafactor":
+        return adafactor_update(grads, opt_state, params, cfg)
+    return adamw_update(grads, opt_state, params, cfg)

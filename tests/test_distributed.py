@@ -1,0 +1,236 @@
+"""Multi-device tests (subprocess with 8 fake CPU devices).
+
+The test process keeps 1 device (conftest); anything needing a mesh runs in
+a fresh interpreter with XLA_FLAGS set before jax import.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(body: str, devices: int = 8, timeout: int = 900) -> str:
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count={devices}"
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+    """) + textwrap.dedent(body)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, f"stdout:{out.stdout}\nstderr:{out.stderr}"
+    return out.stdout
+
+
+def test_distributed_mttkrp_matches_oracle():
+    out = run_sub("""
+        from repro.core.distributed import (DistributedMTTKRP,
+                                            build_sharded_flycoo)
+        from repro.core import init_factors, mttkrp_ref
+        from repro.launch.mesh import make_mesh
+
+        rng = np.random.default_rng(0)
+        dims = (40, 30, 20)
+        idx = np.unique(np.stack(
+            [rng.integers(0, d, 1500) for d in dims], 1).astype(np.int32),
+            axis=0)
+        val = rng.standard_normal(idx.shape[0]).astype(np.float32)
+        mesh = make_mesh((4, 2), ("data", "model"))
+        t = build_sharded_flycoo(idx, val, dims, n_dev=4, rows_pp=8,
+                                 block_p=8)
+        factors = init_factors(jax.random.PRNGKey(1), dims, 8)
+        exe = DistributedMTTKRP(t, mesh, model_axis="model")
+        for sweep in range(2):
+            outs = exe.all_modes(factors)
+            for d in range(3):
+                ref = mttkrp_ref(jnp.asarray(idx), jnp.asarray(val),
+                                 factors, d, dims[d])
+                np.testing.assert_allclose(np.asarray(outs[d]), ref,
+                                           rtol=2e-4, atol=2e-4)
+        print("DIST_MTTKRP_OK")
+    """)
+    assert "DIST_MTTKRP_OK" in out
+
+
+def test_sharded_train_step_matches_single_device():
+    out = run_sub("""
+        import dataclasses
+        from repro import configs, sharding as shlib
+        from repro.launch.mesh import make_mesh
+        from repro.training import (OptimizerConfig, SyntheticLM,
+                                    init_state, make_train_step)
+
+        cfg = configs.smoke("tinyllama-1.1b")
+        ocfg = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+        data = SyntheticLM(cfg, batch=4, seq=32, seed=0)
+        batch = data.next()
+        state = init_state(cfg, ocfg, jax.random.PRNGKey(0))
+        # single device reference
+        _, m_ref = jax.jit(make_train_step(cfg, ocfg))(
+            jax.tree.map(jnp.copy, state), batch)
+        # 2x4 mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
+        ctx = shlib.make_ctx(mesh)
+        with shlib.use(ctx):
+            _, m_sh = jax.jit(make_train_step(cfg, ocfg))(state, batch)
+        a, b = float(m_ref["loss"]), float(m_sh["loss"])
+        assert abs(a - b) < 3e-2, (a, b)
+        print("SHARDED_TRAIN_OK", a, b)
+    """)
+    assert "SHARDED_TRAIN_OK" in out
+
+
+def test_moe_expert_parallel_matches_local():
+    out = run_sub("""
+        from repro import configs, sharding as shlib
+        from repro.launch.mesh import make_mesh
+        from repro.models.moe import apply_moe, init_moe, _apply_local
+        import dataclasses
+
+        cfg = dataclasses.replace(configs.smoke("olmoe-1b-7b"),
+                                  capacity_factor=8.0)
+        params = init_moe(cfg, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                              jnp.bfloat16)
+        ref = _apply_local(params, x, cfg)
+        mesh = make_mesh((2, 4), ("data", "model"))
+        ctx = shlib.make_ctx(mesh)
+        with shlib.use(ctx):
+            out = jax.jit(lambda p, t: apply_moe(p, t, cfg))(params, x)
+        err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                    - ref.astype(jnp.float32))))
+        assert err < 2e-2, err
+        print("MOE_EP_OK", err)
+    """)
+    assert "MOE_EP_OK" in out
+
+
+def test_gradient_compression_error_feedback():
+    out = run_sub("""
+        from functools import partial
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import make_mesh
+        from repro.training.compression import compressed_grad_sync
+
+        mesh = make_mesh((4,), ("pod",))
+        g_global = jax.random.normal(jax.random.PRNGKey(0), (4, 64, 128))
+
+        try:
+            from jax import shard_map
+            sm = partial(shard_map, mesh=mesh, in_specs=(P("pod"), P()),
+                         out_specs=(P("pod"), P("pod")), check_vma=False)
+        except ImportError:
+            from jax.experimental.shard_map import shard_map
+            sm = partial(shard_map, mesh=mesh, in_specs=(P("pod"), P()),
+                         out_specs=(P("pod"), P("pod")), check_rep=False)
+
+        def body(g_shard, key):
+            g = {"w": g_shard[0]}
+            synced, err = compressed_grad_sync(g, key, rank=16, axis_name="pod")
+            return synced["w"][None], err["w"][None]
+
+        synced, err = jax.jit(sm(body))(g_global, jax.random.PRNGKey(1))
+        true_mean = jnp.mean(g_global, axis=0)
+        # every pod agrees on the synced value
+        assert float(jnp.max(jnp.abs(synced - synced[0][None]))) < 1e-5
+        # rank-16 approx of a rank-128 mean won't be exact; error feedback
+        # must store the residual g + e - approx
+        resid = g_global[0] - synced[0]
+        np.testing.assert_allclose(np.asarray(err[0]), np.asarray(resid),
+                                   rtol=1e-4, atol=1e-4)
+        print("COMPRESS_OK")
+    """)
+    assert "COMPRESS_OK" in out
+
+
+def test_dryrun_entry_small_mesh():
+    """dryrun lower path works end to end on a small mesh in-process."""
+    out = run_sub("""
+        import dataclasses
+        from repro.launch.dryrun import lower_cell
+        from repro.launch.mesh import make_mesh
+        from repro.configs import smoke
+
+        cfg = smoke("tinyllama-1.1b")
+        mesh = make_mesh((2, 4), ("data", "model"))
+        rec = lower_cell("tinyllama-1.1b", "train_4k", cfg=dataclasses.replace(
+            cfg, remat="full"), mesh=mesh)
+        assert rec["cost"]["flops_per_device"] > 0
+        assert rec["collectives_per_device"]["total"] > 0
+        print("DRYRUN_SMALL_OK")
+    """)
+    assert "DRYRUN_SMALL_OK" in out
+
+
+def test_pipeline_parallel_matches_sequential():
+    out = run_sub("""
+        from repro.launch.mesh import make_mesh
+        from repro.training.pipeline import pipeline_apply
+
+        n_stages, d = 4, 16
+        mesh = make_mesh((4,), ("pp",))
+        key = jax.random.PRNGKey(0)
+        ws = jax.random.normal(key, (n_stages, d, d)) * 0.3
+
+        def stage_fn(w, h):
+            return jnp.tanh(h @ w)
+
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, d))
+        # sequential reference
+        ref = x
+        for s in range(n_stages):
+            ref = stage_fn(ws[s], ref)
+        y = jax.jit(lambda w, t: pipeline_apply(
+            stage_fn, w, t, mesh=mesh, n_micro=4))(ws, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        print("PIPELINE_OK")
+    """)
+    assert "PIPELINE_OK" in out
+
+
+def test_elastic_checkpoint_reshard():
+    """Save on a 4-device mesh, restore onto 2 devices (elastic shrink)."""
+    out = run_sub("""
+        import tempfile
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import configs, sharding as shlib
+        from repro.launch.mesh import make_mesh
+        from repro.training import (CheckpointManager, OptimizerConfig,
+                                    init_state)
+        from repro.launch import specs as speclib
+
+        cfg = configs.smoke("olmo-1b")
+        ocfg = OptimizerConfig()
+        tmp = tempfile.mkdtemp()
+
+        mesh4 = make_mesh((2, 2), ("data", "model"))
+        ctx4 = shlib.make_ctx(mesh4)
+        state = init_state(cfg, ocfg, jax.random.PRNGKey(0))
+        sh4 = speclib.state_shardings(
+            jax.eval_shape(lambda: state), ctx4)
+        state4 = jax.tree.map(jax.device_put, state, sh4)
+        mgr = CheckpointManager(tmp, async_save=False)
+        mgr.save(state4, {"step": 0})
+
+        # "restart" on a smaller mesh: 2 devices
+        mesh2 = make_mesh((2, 1), ("data", "model"))
+        ctx2 = shlib.make_ctx(mesh2)
+        sh2 = speclib.state_shardings(jax.eval_shape(lambda: state), ctx2)
+        restored, _ = mgr.restore_latest(like=state, shardings=sh2)
+        chk = jax.tree.map(
+            lambda a, b: bool(jnp.all(a == b)), state, restored)
+        assert all(jax.tree.leaves(chk))
+        d = jax.tree.leaves(restored)[5]
+        assert len(d.sharding.device_set) <= 2
+        print("ELASTIC_OK")
+    """)
+    assert "ELASTIC_OK" in out

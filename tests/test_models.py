@@ -1,0 +1,140 @@
+"""Per-arch smoke tests (reduced configs): forward/train step, decode parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import decode_step, forward, init_cache, init_model
+from repro.training import (OptimizerConfig, SyntheticLM, init_state,
+                            make_train_step)
+
+ALL_ARCHS = list(configs.ARCHS)
+
+
+def _inputs(cfg, rng, b, s):
+    kw = {}
+    if cfg.kind == "vlm":
+        kw["embeds"] = jax.random.normal(
+            rng, (b, cfg.n_img_tokens, cfg.d_model), cfg.cdtype)
+        toks = jax.random.randint(rng, (b, s - cfg.n_img_tokens), 0,
+                                  cfg.vocab)
+    elif cfg.kind == "audio":
+        kw["enc_embeds"] = jax.random.normal(rng, (b, s, cfg.d_model),
+                                             cfg.cdtype)
+        toks = jax.random.randint(rng, (b, s), 0, cfg.vocab)
+    else:
+        toks = jax.random.randint(rng, (b, s), 0, cfg.vocab)
+    return toks, kw
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_shapes_no_nan(arch):
+    cfg = configs.smoke(arch)
+    rng = jax.random.PRNGKey(0)
+    params = init_model(cfg, rng)
+    b, s = 2, 32
+    toks, kw = _inputs(cfg, rng, b, s)
+    logits = forward(params, cfg, tokens=toks, **kw)
+    assert logits.shape == (b, s if cfg.kind != "vlm" else s,
+                            cfg.vocab_padded)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step(arch):
+    cfg = configs.smoke(arch)
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    state = init_state(cfg, ocfg, jax.random.PRNGKey(0))
+    data = SyntheticLM(cfg, batch=2, seq=32)
+    step = jax.jit(make_train_step(cfg, ocfg))
+    l0 = None
+    for _ in range(3):
+        state, metrics = step(state, data.next())
+        loss = float(metrics["loss"])
+        assert np.isfinite(loss)
+        l0 = loss if l0 is None else l0
+    assert int(state["step"]) == 3
+    assert float(metrics["grad_norm"]) > 0
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "qwen2.5-3b",
+                                  "command-r-plus-104b", "olmo-1b",
+                                  "rwkv6-3b", "recurrentgemma-9b"])
+def test_decode_matches_forward(arch):
+    cfg = configs.smoke(arch)
+    rng = jax.random.PRNGKey(0)
+    params = init_model(cfg, rng)
+    b, s = 2, 16
+    toks = jax.random.randint(rng, (b, s), 0, cfg.vocab)
+    ref = forward(params, cfg, tokens=toks).astype(jnp.float32)
+    cache = init_cache(cfg, b, s)
+    outs = []
+    for t in range(s):
+        lg, cache = decode_step(params, cache, cfg, toks[:, t:t + 1])
+        outs.append(lg.astype(jnp.float32))
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(dec, ref, rtol=2e-2, atol=2e-2)
+
+
+def test_moe_decode_matches_forward_without_drops():
+    """MoE decode == forward when capacity can't drop (documented
+    capacity-semantics difference otherwise)."""
+    cfg = dataclasses.replace(configs.smoke("olmoe-1b-7b"),
+                              capacity_factor=16.0)
+    rng = jax.random.PRNGKey(0)
+    params = init_model(cfg, rng)
+    b, s = 2, 16
+    toks = jax.random.randint(rng, (b, s), 0, cfg.vocab)
+    ref = forward(params, cfg, tokens=toks).astype(jnp.float32)
+    cache = init_cache(cfg, b, s)
+    outs = []
+    for t in range(s):
+        lg, cache = decode_step(params, cache, cfg, toks[:, t:t + 1])
+        outs.append(lg.astype(jnp.float32))
+    np.testing.assert_allclose(jnp.concatenate(outs, 1), ref, rtol=2e-2,
+                               atol=2e-2)
+
+
+def test_window_attention_restricts_context():
+    """Sliding-window layers must ignore tokens beyond the window."""
+    arch = "recurrentgemma-9b"
+    cfg = dataclasses.replace(
+        configs.smoke(arch), block_pattern=("local",), n_layers=2, window=4)
+    rng = jax.random.PRNGKey(0)
+    params = init_model(cfg, rng)
+    toks = jax.random.randint(rng, (1, 24), 0, cfg.vocab)
+    base = forward(params, cfg, tokens=toks)
+    # perturb a token far outside the window of the last position
+    toks2 = toks.at[0, 2].set((toks[0, 2] + 1) % cfg.vocab)
+    pert = forward(params, cfg, tokens=toks2)
+    last_diff = float(jnp.max(jnp.abs(
+        (base - pert)[0, -1].astype(jnp.float32))))
+    assert last_diff == 0.0, "token outside window leaked into attention"
+
+
+def test_param_count_formula_close_to_actual():
+    for arch in ALL_ARCHS:
+        cfg = configs.smoke(arch)
+        params = init_model(cfg, jax.random.PRNGKey(0))
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        est = cfg.param_count()
+        assert abs(est - actual) / actual < 0.35, (arch, est, actual)
+
+
+def test_full_config_param_counts():
+    """Analytic param counts of the assigned configs are in the right
+    ballpark of their nameplates."""
+    expect = {
+        "command-r-plus-104b": 104e9,
+        "qwen3-moe-235b-a22b": 235e9,
+        "olmoe-1b-7b": 7e9,
+        "tinyllama-1.1b": 1.1e9,
+        "rwkv6-3b": 3e9,
+        "recurrentgemma-9b": 9e9,
+    }
+    for arch, n in expect.items():
+        got = configs.get_config(arch).param_count()
+        assert 0.6 * n < got < 1.5 * n, (arch, got, n)

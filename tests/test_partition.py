@@ -1,0 +1,98 @@
+"""Property tests for the paper's partitioning scheme (Alg. 1, Obs. 1/2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import plan_mode
+from repro.core.flycoo import build_flycoo
+
+
+def _random_coo(rng, dims, nnz):
+    idx = np.stack([rng.integers(0, d, nnz) for d in dims], 1)
+    idx = np.unique(idx.astype(np.int32), axis=0)
+    val = rng.standard_normal(idx.shape[0]).astype(np.float32)
+    return idx, val
+
+
+@settings(max_examples=25, deadline=None)
+@given(dim=st.integers(4, 200), nnz=st.integers(10, 2000),
+       kappa=st.integers(1, 16), seed=st.integers(0, 999))
+def test_remap_ids_are_unique(dim, nnz, kappa, seed):
+    """Observation 1: remap ids are unique per mode => scatter conflict-free."""
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, dim, nnz).astype(np.int64)
+    plan = plan_mode(idx, dim, 0, kappa=kappa)
+    slots = plan.slot_of_elem
+    assert len(np.unique(slots)) == len(slots)
+    assert slots.max() < plan.padded_nnz
+
+
+@settings(max_examples=25, deadline=None)
+@given(dim=st.integers(4, 200), nnz=st.integers(10, 2000),
+       kappa=st.integers(1, 16), seed=st.integers(0, 999))
+def test_row_ownership(dim, nnz, kappa, seed):
+    """Observation 2: all elements of a row land in that row's partition."""
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, dim, nnz).astype(np.int64)
+    plan = plan_mode(idx, dim, 0, kappa=kappa)
+    stride = plan.blocks_pp * plan.block_p
+    part_of_elem = plan.slot_of_elem // stride
+    part_of_row = plan.row_relabel // plan.rows_pp
+    np.testing.assert_array_equal(part_of_elem, part_of_row[idx])
+
+
+@settings(max_examples=25, deadline=None)
+@given(dim=st.integers(4, 300), seed=st.integers(0, 999),
+       kappa=st.integers(1, 16))
+def test_relabel_is_injective(dim, seed, kappa):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, dim, 500).astype(np.int64)
+    plan = plan_mode(idx, dim, 0, kappa=kappa)
+    assert len(np.unique(plan.row_relabel)) == dim
+    assert plan.row_relabel.max() < plan.relabeled_rows
+
+
+@settings(max_examples=20, deadline=None)
+@given(dim=st.integers(16, 400), nnz=st.integers(200, 5000),
+       kappa=st.integers(2, 16), seed=st.integers(0, 99),
+       zipf_a=st.floats(1.1, 3.0))
+def test_load_balance_bound(dim, nnz, kappa, seed, zipf_a):
+    """Paper Sec. 3.4.1 cites Graham's 4/3 (LPT). The cyclic deal over
+    degree-sorted vertices is round-robin, whose provable makespan bound is
+    ``mean + d_max`` (each partition exceeds the mean by at most one
+    first-round item); note d_max <= OPT, so this is <= 2*OPT and equals
+    the 4/3 regime whenever d_max <= OPT/3 (the common sparse case)."""
+    rng = np.random.default_rng(seed)
+    raw = rng.zipf(zipf_a, nnz)
+    idx = ((raw - 1) % dim).astype(np.int64)
+    plan = plan_mode(idx, dim, 0, kappa=kappa)
+    loads = plan.part_nnz
+    degrees = np.bincount(idx, minlength=dim)
+    mean = loads.sum() / plan.kappa
+    assert loads.max() <= mean + degrees.max() + 1
+    # and in the paper's regime (no dominating vertex) the 4/3 holds
+    opt_lb = max(mean, degrees.max())
+    if degrees.max() <= mean / 3:
+        assert loads.max() <= (4.0 / 3.0) * opt_lb + plan.kappa
+
+
+def test_memory_formula_matches_paper():
+    """Sec. 3.5.1: bits/elem = N log2|X| + sum log2 I_h + 32."""
+    rng = np.random.default_rng(0)
+    dims = (64, 32, 16)
+    idx, val = _random_coo(rng, dims, 500)
+    t = build_flycoo(idx, val, dims)
+    import math
+    expected = 3 * math.log2(t.nnz) + sum(math.log2(d) for d in dims) + 32
+    assert abs(t.memory_bits_per_element() - expected) < 1e-9
+
+
+@pytest.mark.parametrize("nmodes", [3, 4, 5])
+def test_high_mode_support(nmodes):
+    """Sec. 5.6: >4-mode tensors are supported (unlike BLCO/MM-CSF)."""
+    rng = np.random.default_rng(1)
+    dims = tuple(rng.integers(8, 40, nmodes))
+    idx, val = _random_coo(rng, dims, 800)
+    t = build_flycoo(idx, val, dims, rows_pp=8, block_p=16)
+    assert t.nmodes == nmodes
+    assert all(p.kappa >= 1 for p in t.plans)

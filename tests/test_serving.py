@@ -1,0 +1,99 @@
+"""Serving engine: generation across families, cache semantics."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import init_model
+from repro.serving import Engine, ServeConfig
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "olmoe-1b-7b",
+                                  "recurrentgemma-9b", "rwkv6-3b",
+                                  "paligemma-3b"])
+def test_generate_shapes(arch):
+    cfg = configs.smoke(arch)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    eng = Engine(params, cfg, ServeConfig(batch=2, max_len=64))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, cfg.vocab)
+    out = eng.generate(prompt, 5)
+    assert out.shape == (2, 5)
+    assert int(out.max()) < cfg.vocab
+
+
+def test_whisper_requires_encoder_input():
+    cfg = configs.smoke("whisper-large-v3")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(AssertionError):
+        Engine(params, cfg, ServeConfig(batch=1, max_len=32))
+
+
+def test_whisper_generation_uses_encoder_memory():
+    cfg = configs.smoke("whisper-large-v3")
+    key = jax.random.PRNGKey(0)
+    params = init_model(cfg, key)
+    enc1 = jax.random.normal(key, (1, 16, cfg.d_model), cfg.cdtype)
+    enc2 = enc1 + 1.0
+    tok = jnp.zeros((1, 1), jnp.int32)
+    e1 = Engine(params, cfg, ServeConfig(batch=1, max_len=32),
+                enc_embeds=enc1)
+    e2 = Engine(params, cfg, ServeConfig(batch=1, max_len=32),
+                enc_embeds=enc2)
+    o1, o2 = e1.prefill(tok), e2.prefill(tok)
+    assert float(jnp.max(jnp.abs(
+        o1.astype(jnp.float32) - o2.astype(jnp.float32)))) > 0
+
+
+def test_greedy_is_deterministic():
+    cfg = configs.smoke("tinyllama-1.1b")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0, cfg.vocab)
+    outs = []
+    for _ in range(2):
+        eng = Engine(params, cfg, ServeConfig(batch=2, max_len=32))
+        outs.append(eng.generate(prompt, 6))
+    assert jnp.array_equal(outs[0], outs[1])
+
+
+def test_long_context_state_size_constant():
+    """SSM/hybrid caches don't grow with max_len (the long_500k property)."""
+    cfg = configs.smoke("rwkv6-3b")
+    from repro.models import init_cache
+    c1 = init_cache(cfg, 1, 64)
+    c2 = init_cache(cfg, 1, 4096)
+    s1 = sum(x.size for x in jax.tree.leaves(c1))
+    s2 = sum(x.size for x in jax.tree.leaves(c2))
+    assert s1 == s2
+
+    cfg = configs.smoke("recurrentgemma-9b")
+    c1 = init_cache(cfg, 1, 64)
+    c2 = init_cache(cfg, 1, 4096)
+    s1 = sum(x.size for x in jax.tree.leaves(c1))
+    s2 = sum(x.size for x in jax.tree.leaves(c2))
+    # only the (bounded) local-attention window grows, capped at cfg.window
+    assert s2 <= s1 * (cfg.window / 16 + 1)
+
+
+def test_kv_quant_decode_close_to_exact():
+    """int8 KV cache (kv_quant): decode stays within quantization noise."""
+    import dataclasses
+    from repro.models import decode_step, forward, init_cache, init_model
+    import jax.numpy as jnp
+
+    cfg = configs.smoke("tinyllama-1.1b")
+    cfgq = dataclasses.replace(cfg, kv_quant=True)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+    ref = forward(params, cfg, tokens=toks).astype(jnp.float32)
+    cache = init_cache(cfgq, 2, 12)
+    outs = []
+    for t in range(12):
+        lg, cache = decode_step(params, cache, cfgq, toks[:, t:t + 1])
+        outs.append(lg.astype(jnp.float32))
+    dec = jnp.concatenate(outs, 1)
+    rel = float(jnp.max(jnp.abs(dec - ref))) / (
+        float(jnp.max(jnp.abs(ref))) + 1e-9)
+    assert rel < 0.15, rel
+    # and the cache really is int8
+    k = cache["stage0"]["b0"]["k"]
+    assert k.dtype == jnp.int8

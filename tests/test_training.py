@@ -1,0 +1,136 @@
+"""Training substrate: optimizer, checkpointing, fault tolerance, data."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.training import (CheckpointManager, ControllerConfig,
+                            OptimizerConfig, SyntheticLM, TrainController,
+                            init_state, make_train_step)
+from repro.training import optimizer as opt_lib
+
+
+def test_adamw_minimizes_quadratic():
+    ocfg = OptimizerConfig(lr=0.1, warmup_steps=1, total_steps=200,
+                           weight_decay=0.0, grad_clip=100.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt_lib.init(params, ocfg)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt_lib.update(grads, state, params, ocfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_adafactor_minimizes_quadratic():
+    ocfg = OptimizerConfig(name="adafactor", lr=0.1, warmup_steps=1,
+                           total_steps=300, weight_decay=0.0)
+    params = {"w": jnp.ones((4, 3)) * 2.0}
+    state = opt_lib.init(params, ocfg)
+    for _ in range(250):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt_lib.update(grads, state, params, ocfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_grad_clip():
+    grads = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = opt_lib.clip_by_global_norm(grads, 1.0)
+    assert float(norm) > 100
+    assert float(opt_lib.global_norm(clipped)) == pytest.approx(1.0, 1e-3)
+
+
+def test_loss_decreases_smoke():
+    cfg = configs.smoke("tinyllama-1.1b")
+    ocfg = OptimizerConfig(lr=3e-3, warmup_steps=2, total_steps=40)
+    state = init_state(cfg, ocfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, ocfg))
+    data = SyntheticLM(cfg, batch=4, seq=64, seed=0)
+    losses = []
+    for _ in range(30):
+        state, m = step(state, data.next())
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses
+
+
+def test_grad_accum_matches_full_batch():
+    cfg = configs.smoke("olmo-1b")
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    key = jax.random.PRNGKey(0)
+    s1 = init_state(cfg, ocfg, key)
+    s2 = jax.tree.map(jnp.copy, s1)
+    batch = SyntheticLM(cfg, batch=4, seq=32, seed=0).next()
+    st1, m1 = jax.jit(make_train_step(cfg, ocfg, grad_accum=1))(s1, batch)
+    st2, m2 = jax.jit(make_train_step(cfg, ocfg, grad_accum=2))(s2, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), abs=2e-2)
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        st1["params"], st2["params"])
+    assert max(jax.tree.leaves(d)) < 5e-2
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = configs.smoke("tinyllama-1.1b")
+    ocfg = OptimizerConfig()
+    state = init_state(cfg, ocfg, jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    mgr.save(state, {"step": 0})
+    restored, data_state = mgr.restore_latest(like=state)
+    ok = jax.tree.map(lambda a, b: bool(jnp.all(a == b)), state, restored)
+    assert all(jax.tree.leaves(ok))
+
+
+def test_checkpoint_retention_and_atomicity(tmp_path):
+    cfg = configs.smoke("olmo-1b")
+    ocfg = OptimizerConfig()
+    state = init_state(cfg, ocfg, jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        state = {**state, "step": jnp.asarray(s, jnp.int32)}
+        mgr.save(state, {})
+    assert mgr.all_steps() == [3, 4]
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+
+
+def test_preemption_resume(tmp_path):
+    cfg = configs.smoke("tinyllama-1.1b")
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=20)
+    ctrl = ControllerConfig(ckpt_dir=str(tmp_path), ckpt_every=4, keep=2,
+                            async_save=False)
+    tc = TrainController(cfg, ocfg, ctrl, SyntheticLM(cfg, 2, 32, seed=0))
+    with pytest.raises(InterruptedError):
+        tc.run(16, fail_at=10)
+    # restart-the-binary semantics: a fresh controller resumes
+    tc2 = TrainController(cfg, ocfg, ctrl, SyntheticLM(cfg, 2, 32, seed=0))
+    assert int(tc2.state["step"]) == 8
+    assert tc2.data.step == 8  # data cursor restored with the state
+    state, metrics = tc2.run(16)
+    assert int(state["step"]) == 16
+
+
+def test_straggler_watchdog():
+    cfg = configs.smoke("olmo-1b")
+    ocfg = OptimizerConfig()
+    ctrl = ControllerConfig(ckpt_dir="/tmp/_watchdog_unused",
+                            straggler_factor=3.0)
+    tc = TrainController.__new__(TrainController)
+    tc.ctrl = ctrl
+    tc.durations, tc.straggler_steps = [], []
+    for i in range(10):
+        tc._watch(i, 0.1)
+    tc._watch(10, 1.0)   # 10x median => flagged
+    assert tc.straggler_steps == [10]
+
+
+def test_data_pipeline_determinism_and_resume():
+    cfg = configs.smoke("qwen2.5-3b")
+    d1 = SyntheticLM(cfg, 2, 16, seed=7)
+    b0, b1 = d1.next(), d1.next()
+    d2 = SyntheticLM(cfg, 2, 16, seed=7)
+    d2.set_state({"step": 1, "seed": 7})
+    b1b = d2.next()
+    np.testing.assert_array_equal(b1["tokens"], b1b["tokens"])
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
