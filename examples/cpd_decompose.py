@@ -11,6 +11,7 @@ import jax
 import numpy as np
 
 from repro.core import build_flycoo, cp_als
+from repro.engine import ExecutionConfig
 
 
 def main():
@@ -32,10 +33,10 @@ def main():
     tensor = build_flycoo(idx, val, dims, rows_pp=16, block_p=32)
     print(f"planted rank-{true_rank} tensor as {val.size}-entry COO")
 
+    config = ExecutionConfig(backend="pallas" if args.pallas else "xla",
+                             interpret=True)
     res = cp_als(tensor, rank=args.rank, iters=args.iters,
-                 key=jax.random.PRNGKey(1),
-                 backend="pallas" if args.pallas else "xla",
-                 interpret=True)
+                 key=jax.random.PRNGKey(1), config=config)
     for i, f in enumerate(res.fits):
         print(f"  sweep {i:2d}: fit = {f:.4f}")
     assert res.fits[-1] > 0.95, "ALS should recover the planted CPD"

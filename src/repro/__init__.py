@@ -1,4 +1,8 @@
 """FLYCOO-TPU: Sparse MTTKRP for Tensor Decomposition (CF'24) as a
-production multi-pod JAX framework. See DESIGN.md / EXPERIMENTS.md."""
+production multi-pod JAX framework. See DESIGN.md / EXPERIMENTS.md.
 
-__version__ = "1.0.0"
+``repro.engine`` is the functional spMTTKRP execution engine (pytree
+``EngineState`` + ``ExecutionConfig``); ``repro.core`` holds the FLYCOO
+format, preprocessing, and CPD-ALS built on top of it."""
+
+__version__ = "1.1.0"

@@ -1,4 +1,39 @@
-"""Core paper contribution: FLYCOO-TPU spMTTKRP + CPD-ALS (see DESIGN.md)."""
+"""Core paper contribution: FLYCOO-TPU spMTTKRP + CPD-ALS (see DESIGN.md).
+
+Engine API
+----------
+The spMTTKRP execution engine is functional (:mod:`repro.engine`): a
+pytree ``EngineState`` (layout arrays + relabel tables + static mode
+plans) threaded through pure functions, with execution policy in a frozen
+``ExecutionConfig`` (backend registry ``xla | pallas | ref``, interpret,
+block_p, kappa policy, precision, donation):
+
+    from repro import engine
+    from repro.engine import ExecutionConfig
+
+    state = engine.init(tensor, ExecutionConfig(backend="pallas"))
+    out, state = engine.mttkrp(state, factors)       # one mode + remap
+    outs, state = engine.all_modes(state, factors)   # ONE jitted lax.scan
+
+``engine.all_modes`` runs the whole mode rotation (paper Alg. 5) as a
+single jitted ``lax.scan`` with donated layout buffers — the T_in/T_out
+swap without host round-trips — and works from any resident mode.
+
+Migration from the deprecated stateful executor:
+
+  ===============================  =====================================
+  old (stateful, deprecated)       new (functional)
+  ===============================  =====================================
+  ``MTTKRPExecutor(t, backend=b)`` ``s = engine.init(t,
+                                   ExecutionConfig(backend=b))``
+  ``exe.step(factors)``            ``out, s = engine.mttkrp(s, factors)``
+  ``exe.all_modes(factors)``       ``outs, s = engine.all_modes(s,
+                                   factors)``
+  ``exe.layout`` / ``current_mode``  ``s.val``/``s.idx``/``s.alpha`` /
+                                     ``s.mode``
+  ``backend="..."`` kwargs         ``ExecutionConfig`` + backend registry
+  ===============================  =====================================
+"""
 from .flycoo import FlycooTensor, build_flycoo
 from .partition import ModePlan, plan_mode, choose_kappa
 from .mttkrp import MTTKRPExecutor, mttkrp_ref, mode_step

@@ -1,9 +1,14 @@
-"""CPD via Alternating Least Squares on top of the spMTTKRP engine.
+"""CPD via Alternating Least Squares on top of the functional spMTTKRP engine.
 
 For each mode d (Eq. 1 of the paper):
     M_d   = X_(d) * KRP(Y_w, w != d)          <- the paper's kernel
     V_d   = hadamard_{w != d} (Y_w^T Y_w)      (R x R)
     Y_d   = M_d @ pinv(V_d); column-normalize -> lambda
+
+A full ALS sweep is ONE traced program: ``engine.all_modes`` runs the mode
+rotation as a jitted ``lax.scan`` and the Gauss-Seidel factor update rides
+inside it as the scan's ``fold`` hook — no per-mode host dispatch, and the
+layout rotation (the paper's T_in/T_out swap) never leaves the device.
 
 Fit is computed with the standard sparse-CPD identity:
     ||X - X_hat||^2 = ||X||^2 - 2<X, X_hat> + ||X_hat||^2
@@ -19,8 +24,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine
+from repro.engine import ExecutionConfig
+
 from .flycoo import FlycooTensor
-from .mttkrp import MTTKRPExecutor, mttkrp_ref
+from .mttkrp import mttkrp_ref
 
 
 def init_factors(key, dims: Sequence[int], rank: int) -> list[jax.Array]:
@@ -50,6 +58,14 @@ def _als_update(mttkrp_out, grams_other, eps=1e-8):
     return y / lam, lam
 
 
+def _als_fold(d: int, m_d, factors, lam):
+    """Gauss-Seidel update for mode ``d``, traced inside the engine scan."""
+    n = len(factors)
+    grams_other = tuple(gram(factors[w]) for w in range(n) if w != d)
+    y, lam = _als_update(m_d, grams_other)
+    return tuple(factors[:d]) + (y,) + tuple(factors[d + 1:]), lam
+
+
 @dataclasses.dataclass
 class CPDResult:
     factors: list[jax.Array]
@@ -62,31 +78,37 @@ def cp_als(
     rank: int,
     iters: int = 10,
     key=None,
-    backend: str = "xla",
-    interpret: bool = False,
+    config: ExecutionConfig | None = None,
+    backend: str | None = None,
+    interpret: bool | None = None,
     track_fit: bool = True,
 ) -> CPDResult:
-    """Run CPD-ALS for ``iters`` sweeps over all modes (paper Alg. 5 outer)."""
+    """Run CPD-ALS for ``iters`` sweeps over all modes (paper Alg. 5 outer).
+
+    Execution policy comes from ``config``; ``backend``/``interpret`` are
+    legacy conveniences that build one (mutually exclusive with ``config``).
+    """
+    if config is None:
+        config = ExecutionConfig(backend=backend or "xla",
+                                 interpret=interpret)
+    elif backend is not None or interpret is not None:
+        raise ValueError("pass either config or backend/interpret, not both")
     if key is None:
         key = jax.random.PRNGKey(0)
     n = tensor.nmodes
-    factors = init_factors(key, tensor.dims, rank)
+    factors = tuple(init_factors(key, tensor.dims, rank))
     lam = jnp.ones((rank,), jnp.float32)
-    exe = MTTKRPExecutor(tensor, backend=backend, interpret=interpret)
+    state = engine.init(tensor, config)
     norm_x_sq = float(np.sum(tensor.values.astype(np.float64) ** 2))
 
     fits = []
     for _ in range(iters):
-        m_last = None
-        for d in range(n):
-            m = exe.step(factors)  # mode-d MTTKRP + dynamic remap
-            grams_other = [gram(factors[w]) for w in range(n) if w != d]
-            y, lam = _als_update(m, tuple(grams_other))
-            factors[d] = y
-            m_last = m
+        # One dispatch per sweep: scan over modes, ALS update in the fold.
+        outs, state, factors, lam = engine.all_modes(
+            state, factors, fold=_als_fold, carry=lam)
         if track_fit:
-            fits.append(_fit(norm_x_sq, m_last, factors, lam))
-    return CPDResult(factors=factors, lam=lam, fits=fits)
+            fits.append(_fit(norm_x_sq, outs[n - 1], factors, lam))
+    return CPDResult(factors=list(factors), lam=lam, fits=fits)
 
 
 def _fit(norm_x_sq: float, m_last, factors, lam) -> float:

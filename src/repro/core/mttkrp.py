@@ -1,30 +1,44 @@
-"""spMTTKRP along all modes (paper Alg. 2/4/5) on the FLYCOO-TPU layout.
+"""spMTTKRP along all modes (paper Alg. 2/4/5) — deprecated stateful shims.
 
-Runtime state for the current mode-d layout (device arrays; pads hold
-val=0, idx=0, alpha=-1):
+The implementation now lives in :mod:`repro.engine` as pure functions over
+a pytree ``EngineState`` (``engine.init`` / ``engine.mttkrp`` /
+``engine.all_modes`` — the latter a single jitted ``lax.scan`` over the
+mode rotation). This module keeps the original surface alive:
 
-  val   (S_d,)    f32
-  idx   (S_d, N)  i32   beta  — original per-mode indices
-  alpha (S_d, N)  i32   alpha — the element's slot in *every* mode layout
-                        (alpha[s, d] == s for live slots in layout d)
+  * :func:`mttkrp_ref` — the COO oracle (unchanged, still the test anchor);
+  * :func:`mode_step` — the one-mode EC+remap jit, now resolving its
+    elementwise-computation backend through the engine's registry instead
+    of string dispatch;
+  * :class:`MTTKRPExecutor` — a thin deprecation shim over the engine.
+    It no longer requires starting at mode 0 and gained ``reset()``.
 
-One ``mode_step`` jit performs, exactly as the paper's thread block does
-(Alg. 4): (a) elementwise computation for mode d (Alg. 2) and (b) dynamic
-tensor remapping into the mode-(d+1) layout (Alg. 3). Remapping is a
-conflict-free scatter because remap ids are unique (Observation 1); output
-accumulation needs no cross-partition reduction because every output row is
-owned by one partition (Observation 2) — in XLA terms the segment-sum within
-a partition's contiguous relabeled row block, in Pallas terms a VMEM-resident
-one-hot MXU accumulation.
+New code should import from :mod:`repro.engine`. Migration table:
+
+  ===============================  =====================================
+  old (stateful)                   new (functional)
+  ===============================  =====================================
+  ``MTTKRPExecutor(t, backend=b)`` ``s = engine.init(t,
+                                   ExecutionConfig(backend=b))``
+  ``exe.step(factors)``            ``out, s = engine.mttkrp(s, factors)``
+  ``exe.all_modes(factors)``       ``outs, s = engine.all_modes(s,
+                                   factors)``
+  ``exe.layout["val"]`` etc.       ``s.val`` / ``s.idx`` / ``s.alpha``
+  ``exe.current_mode``             ``s.mode``
+  ===============================  =====================================
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+
+from repro import engine as _engine
+from repro.engine import ExecutionConfig
+from repro.engine.backends import compute_lrow, get_backend  # noqa: F401
+from repro.engine.state import ModeStatic
 
 from .flycoo import FlycooTensor
 
@@ -43,63 +57,24 @@ def mttkrp_ref(indices, values, factors, mode: int, dim: int):
 
 
 # --------------------------------------------------------------------------
-# Mode-d elementwise computation on the kernel layout (Alg. 2 + 4).
+# Compat wrappers over the engine's backend registry (benchmarks import
+# these; the registry is the source of truth).
 # --------------------------------------------------------------------------
-def _gather_partials(layout, factors, mode: int):
-    """ell(r) = val * prod_{w != d} Y_w[c_w, r]  (Alg. 2 lines 7-13)."""
-    val, idx = layout["val"], layout["idx"]
-    partials = val[:, None].astype(jnp.float32)
-    for w, f in enumerate(factors):
-        if w == mode:
-            continue
-        partials = partials * jnp.take(f, idx[:, w], axis=0, mode="fill",
-                                       fill_value=0.0)
-    return partials
-
-
 def _ec_xla(layout, factors, mode: int, *, rows_pp, blocks_pp, block_p,
             kappa):
-    """XLA backend: segment-sum into the relabeled row space.
-
-    Pads have alpha[s, d] = -1 => lrow -1 => routed to a dump row with
-    val = 0 (contributes nothing).
-    """
-    partials = _gather_partials(layout, factors, mode)
-    stride = blocks_pp * block_p
-    slot = jnp.arange(layout["val"].shape[0], dtype=jnp.int32)
-    part = slot // stride
-    lrow = layout["lrow"]
-    gid = jnp.where(lrow < 0, 0, part * rows_pp + lrow)
-    return jax.ops.segment_sum(partials, gid, num_segments=kappa * rows_pp)
+    plan = ModeStatic(kappa=kappa, rows_pp=rows_pp, blocks_pp=blocks_pp,
+                      block_p=block_p, dim=0)
+    return get_backend("xla")(layout, tuple(factors), mode, plan=plan,
+                              config=ExecutionConfig())
 
 
 def _ec_pallas(layout, factors, mode: int, interpret: bool, *, kappa,
                rows_pp, blocks_pp, block_p):
-    from repro.kernels import ops as kops
-
-    partials_in = []  # gathered input rows, kernel multiplies them
-    for w, f in enumerate(factors):
-        if w == mode:
-            continue
-        partials_in.append(jnp.take(f, layout["idx"][:, w], axis=0,
-                                    mode="fill", fill_value=0.0))
-    gathered = jnp.stack(partials_in, axis=1)  # (S, N-1, R)
-    return kops.mttkrp_fused(
-        gathered,
-        layout["val"],
-        layout["lrow"],
-        kappa=kappa,
-        rows_pp=rows_pp,
-        blocks_pp=blocks_pp,
-        block_p=block_p,
-        interpret=interpret,
-    )
-
-
-def compute_lrow(idx_d, row_relabel_d, rows_pp: int, alive):
-    """Recompute local row ids after a remap (relabel table lookup)."""
-    rel = jnp.take(row_relabel_d, idx_d, axis=0, mode="fill", fill_value=0)
-    return jnp.where(alive, rel % rows_pp, -1)
+    plan = ModeStatic(kappa=kappa, rows_pp=rows_pp, blocks_pp=blocks_pp,
+                      block_p=block_p, dim=0)
+    config = ExecutionConfig(backend="pallas", interpret=interpret)
+    return get_backend("pallas")(layout, tuple(factors), mode, plan=plan,
+                                 config=config)
 
 
 @functools.partial(
@@ -113,19 +88,18 @@ def mode_step(layout, factors, row_relabel_d, *, mode: int, rows_pp: int,
     """One iteration of Alg. 5's mode loop: EC (Alg. 2) + remap (Alg. 3).
 
     Returns (out_rel, next_layout). ``out_rel`` is the mode-d MTTKRP result
-    in relabeled row space; caller maps back with ``row_relabel``.
+    in relabeled row space; caller maps back with ``row_relabel``. Kept for
+    per-mode benchmarking; the scanned path is ``engine.all_modes``.
     """
     nmodes = layout["idx"].shape[1]
+    plan = ModeStatic(kappa=kappa, rows_pp=rows_pp, blocks_pp=blocks_pp,
+                      block_p=block_p, dim=int(row_relabel_d.shape[0]))
+    config = ExecutionConfig(backend=backend, interpret=interpret)
     alive = layout["alpha"][:, mode] >= 0
     lrow = compute_lrow(layout["idx"][:, mode], row_relabel_d, rows_pp, alive)
     ec_layout = {"val": layout["val"], "idx": layout["idx"], "lrow": lrow}
-    if backend == "pallas":
-        out_rel = _ec_pallas(ec_layout, factors, mode, interpret,
-                             kappa=kappa, rows_pp=rows_pp,
-                             blocks_pp=blocks_pp, block_p=block_p)
-    else:
-        out_rel = _ec_xla(ec_layout, factors, mode, rows_pp=rows_pp,
-                          blocks_pp=blocks_pp, block_p=block_p, kappa=kappa)
+    out_rel = get_backend(config)(ec_layout, tuple(factors), mode, plan=plan,
+                                  config=config)
 
     # ---- Alg. 3: dynamic remap into the mode-(d+1) layout. -----------------
     nxt = (mode + 1) % nmodes
@@ -143,66 +117,67 @@ def mode_step(layout, factors, row_relabel_d, *, mode: int, rows_pp: int,
 
 
 # --------------------------------------------------------------------------
-# Host-side driver (Alg. 5).
+# Deprecated host-side driver (Alg. 5) — delegates to repro.engine.
 # --------------------------------------------------------------------------
 class MTTKRPExecutor:
-    """Executes spMTTKRP along all modes with dynamic remapping (Alg. 5).
+    """DEPRECATED stateful wrapper around :mod:`repro.engine`.
 
-    Holds device copies of the relabel tables and the *current* layout; the
-    layout rotates through the modes as computation proceeds, exactly like
-    the paper's T_in/T_out swap — one live tensor copy plus the remap target.
+    The executor used to own mutable layout state and a host-side mode
+    loop; it now merely threads an immutable ``EngineState`` through the
+    functional API. Unlike the original, ``all_modes`` works from *any*
+    resident mode (the mode-0 assertion is gone) and ``reset()`` returns
+    the executor to the mode-0 layout.
     """
 
     def __init__(self, tensor: FlycooTensor, backend: str = "xla",
                  interpret: bool = False):
+        warnings.warn(
+            "MTTKRPExecutor is deprecated; use repro.engine "
+            "(init/mttkrp/all_modes) — see repro.core.mttkrp docstring "
+            "for the migration table", DeprecationWarning, stacklevel=2)
         self.tensor = tensor
         self.backend = backend
         self.interpret = interpret
         self.plans = tensor.plans
+        # interpret=False historically meant "library default", which off-TPU
+        # must interpret anyway; map it to the config's auto mode.
+        self.config = ExecutionConfig(backend=backend,
+                                      interpret=True if interpret else None)
+        self._state = _engine.init(tensor, self.config)
         # note: out_user[v] = out_rel[row_relabel[v]] (relabel is old->new)
-        self.row_relabel = [jnp.asarray(p.row_relabel) for p in self.plans]
-        arrs = tensor.layout_arrays(0)
-        alpha = np.stack(
-            [self._alpha_for_mode(d) for d in range(tensor.nmodes)], axis=1
-        )
-        self.layout = {
-            "val": jnp.asarray(arrs["val"]),
-            "idx": jnp.asarray(arrs["idx"]),
-            "alpha": jnp.asarray(alpha),
-        }
-        self.current_mode = 0
+        self.row_relabel = list(self._state.relabel)
 
-    def _alpha_for_mode(self, d: int) -> np.ndarray:
-        """alpha column d, laid out physically in mode-0 slots."""
-        p0 = self.tensor.plans[0]
-        pd = self.tensor.plans[d]
-        col = np.full(p0.padded_nnz, -1, dtype=np.int32)
-        col[p0.slot_of_elem] = pd.slot_of_elem.astype(np.int32)
-        return col
+    # ------------------------------------------------------------ state view
+    @property
+    def state(self):
+        """The underlying functional ``EngineState`` (read-only)."""
+        return self._state
 
+    @property
+    def current_mode(self) -> int:
+        return self._state.mode
+
+    @property
+    def layout(self) -> dict:
+        """Resident layout sliced to the current mode's padded size
+        (the engine stores it padded to the uniform S_max)."""
+        sd = self.plans[self._state.mode].padded_nnz
+        return {"val": self._state.val[:sd], "idx": self._state.idx[:sd],
+                "alpha": self._state.alpha[:sd]}
+
+    # ------------------------------------------------------------ execution
     def step(self, factors: Sequence[jax.Array]) -> jax.Array:
         """Compute MTTKRP for the current mode; remap to the next; rotate."""
-        d = self.current_mode
-        plan = self.plans[d]
-        nxt = (d + 1) % self.tensor.nmodes
-        out_rel, next_layout = mode_step(
-            self.layout,
-            tuple(factors),
-            self.row_relabel[d],
-            mode=d,
-            rows_pp=plan.rows_pp,
-            blocks_pp=plan.blocks_pp,
-            block_p=plan.block_p,
-            kappa=plan.kappa,
-            next_size=self.plans[nxt].padded_nnz,
-            backend=self.backend,
-            interpret=self.interpret,
-        )
-        out = jnp.take(out_rel, self.row_relabel[d], axis=0)  # un-relabel
-        self.layout = next_layout
-        self.current_mode = nxt
+        out, self._state = _engine.mttkrp(self._state, tuple(factors))
         return out
 
     def all_modes(self, factors: Sequence[jax.Array]) -> list[jax.Array]:
-        assert self.current_mode == 0, "executor must be at mode 0"
-        return [self.step(factors) for _ in range(self.tensor.nmodes)]
+        """All-modes MTTKRP (one scanned dispatch), from ANY current mode;
+        returns outputs indexed by mode d."""
+        outs, self._state = _engine.all_modes(self._state, tuple(factors))
+        return outs
+
+    def reset(self) -> None:
+        """Return to the pristine mode-0 layout (re-derives device state
+        from the host tensor; cheap relative to preprocessing)."""
+        self._state = _engine.init(self.tensor, self.config)

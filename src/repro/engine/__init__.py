@@ -1,0 +1,34 @@
+"""Functional spMTTKRP engine (paper Alg. 5 as pure functions).
+
+Public surface:
+
+  ExecutionConfig                  frozen, hashable execution policy
+  EngineState                      pytree layout state (scan/shard_map ready)
+  init(tensor, config)             -> EngineState
+  mttkrp(state, factors[, mode])   -> (out, EngineState)
+  all_modes(state, factors)        -> (outs_by_mode, EngineState), ONE
+                                      jitted lax.scan over the mode rotation
+  BACKENDS / register_backend / get_backend
+                                   elementwise-computation backend registry
+                                   (replaces string-typed ``backend=`` kwargs)
+
+Migration from the deprecated stateful executor:
+
+  MTTKRPExecutor(t, backend=b)     -> s = engine.init(t, ExecutionConfig(backend=b))
+  exe.step(factors)                -> out, s = engine.mttkrp(s, factors)
+  exe.all_modes(factors)           -> outs, s = engine.all_modes(s, factors)
+  exe.layout / exe.current_mode    -> s.val / s.idx / s.alpha / s.mode
+"""
+from .config import ExecutionConfig, KAPPA_POLICIES
+from .state import EngineState, ModeStatic, mode_static_from_plan
+from .backends import (BACKENDS, register_backend, get_backend,
+                       compute_lrow)
+from .api import (init, mttkrp, all_modes, scan_jaxpr, reset_counters,
+                  TRACE_COUNTS, DISPATCH_COUNTS, FoldFn)
+
+__all__ = [
+    "ExecutionConfig", "KAPPA_POLICIES", "EngineState", "ModeStatic",
+    "mode_static_from_plan", "BACKENDS", "register_backend", "get_backend",
+    "compute_lrow", "init", "mttkrp", "all_modes", "scan_jaxpr",
+    "reset_counters", "TRACE_COUNTS", "DISPATCH_COUNTS", "FoldFn",
+]

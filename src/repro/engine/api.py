@@ -1,0 +1,275 @@
+"""Functional spMTTKRP engine: ``init`` / ``mttkrp`` / ``all_modes``.
+
+The paper's Alg. 5 as pure functions over a pytree
+:class:`~repro.engine.state.EngineState`:
+
+  init(tensor, config)            -> EngineState           (host, once)
+  mttkrp(state, factors[, mode])  -> (out, EngineState)    (one mode + remap)
+  all_modes(state, factors)       -> (outs, EngineState)   (one jitted scan)
+
+``all_modes`` is a *single* jitted program: ``lax.scan`` over the mode
+sequence, each step a ``lax.switch`` into that mode's statically-shaped
+elementwise computation + dynamic remap (Alg. 2 + 3). There is no per-mode
+Python dispatch, the T_in/T_out layout swap is the scan carry (donated on
+TPU/GPU), and the rotation may start at *any* resident mode — the old
+executor's ``current_mode == 0`` restriction is gone.
+
+An optional ``fold`` callback runs inside the scan after each mode's
+MTTKRP with that mode's output — this is how CPD-ALS updates factor
+matrices mode-by-mode (Gauss-Seidel) while keeping the whole sweep one
+traced program (see ``repro.core.cpd``).
+"""
+from __future__ import annotations
+
+import collections
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .backends import compute_lrow, get_backend
+from .config import ExecutionConfig
+from .state import EngineState, ModeStatic, mode_static_from_plan
+
+# Fold callback: fold(mode, out_d, factors, carry) -> (factors, carry),
+# called inside the traced scan with *static* mode and out_d of shape
+# (dims[mode], R). Must be a stable (module-level) callable: its identity
+# is part of the jit cache key.
+FoldFn = Callable[[int, jax.Array, tuple, object], tuple]
+
+# Observability: traces = how many times a program was (re)built; dispatches
+# = how many jitted calls were issued. The benchmarks report the host-loop
+# elimination as dispatches-per-sweep (was nmodes, now 1).
+TRACE_COUNTS: collections.Counter = collections.Counter()
+DISPATCH_COUNTS: collections.Counter = collections.Counter()
+
+_JIT_CACHE: dict = {}
+
+
+def reset_counters() -> None:
+    TRACE_COUNTS.clear()
+    DISPATCH_COUNTS.clear()
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def init(tensor, config: ExecutionConfig | None = None,
+         start_mode: int = 0) -> EngineState:
+    """Build the device-resident engine state for ``tensor``.
+
+    ``tensor`` is a prebuilt :class:`~repro.core.flycoo.FlycooTensor` (its
+    plans govern the layout) or a raw COO triple ``(indices, values, dims)``
+    — then the FLYCOO plans are built here under ``config``'s kappa policy.
+    The returned state holds the ``start_mode`` layout, padded to the
+    uniform slot count ``S_max`` so every mode shares one pytree shape.
+    """
+    config = config or ExecutionConfig()
+    tensor = _as_flycoo(tensor, config)
+    n = tensor.nmodes
+    if not 0 <= start_mode < n:
+        raise ValueError(f"start_mode {start_mode} out of range for {n} modes")
+    statics = tuple(mode_static_from_plan(p) for p in tensor.plans)
+    smax = max(s.padded_nnz for s in statics)
+
+    base = tensor.plans[start_mode]
+    val = np.zeros(smax, dtype=np.float32)
+    idx = np.zeros((smax, n), dtype=np.int32)
+    alpha = np.full((smax, n), -1, dtype=np.int32)
+    val[base.slot_of_elem] = tensor.values
+    idx[base.slot_of_elem] = tensor.indices
+    for d in range(n):
+        alpha[base.slot_of_elem, d] = \
+            tensor.plans[d].slot_of_elem.astype(np.int32)
+
+    return EngineState(
+        val=jnp.asarray(val),
+        idx=jnp.asarray(idx),
+        alpha=jnp.asarray(alpha),
+        relabel=tuple(jnp.asarray(p.row_relabel) for p in tensor.plans),
+        mode=int(start_mode),
+        dims=tensor.dims,
+        statics=statics,
+        config=config,
+    )
+
+
+def _as_flycoo(tensor, config: ExecutionConfig):
+    from repro.core.flycoo import FlycooTensor, build_flycoo
+
+    if isinstance(tensor, FlycooTensor):
+        return tensor
+    indices, values, dims = tensor
+    kappa = config.kappa if config.kappa_policy == "fixed" else None
+    return build_flycoo(indices, values, dims, kappa=kappa,
+                        rows_pp=config.rows_pp, block_p=config.block_p)
+
+
+# --------------------------------------------------------------------------
+# One mode: EC (Alg. 2/4) + dynamic remap (Alg. 3), statically shaped.
+# --------------------------------------------------------------------------
+def _mode_branch(d: int, *, statics: Sequence[ModeStatic], smax: int,
+                 config: ExecutionConfig, fold: FoldFn | None,
+                 pad_out_to: int | None):
+    """Build the traced step for (static) mode ``d``.
+
+    Returns a function (layout3, relabels, factors, carry) ->
+    ((nval, nidx, nalpha), out, factors, carry) where ``layout3`` is the
+    S_max-padded (val, idx, alpha) triple and ``out`` is the mode-``d``
+    MTTKRP in user row space, zero-padded to ``pad_out_to`` rows when a
+    uniform stacked shape is needed (the scan path).
+    """
+    plan = statics[d]
+    n = len(statics)
+    nxt = (d + 1) % n
+    sd = plan.padded_nnz
+    backend = get_backend(config)
+
+    def step(layout3, relabels, factors, carry):
+        val, idx, alpha = layout3
+        v, ix, al = val[:sd], idx[:sd], alpha[:sd]
+        alive = al[:, d] >= 0
+        lrow = compute_lrow(ix[:, d], relabels[d], plan.rows_pp, alive)
+        out_rel = backend({"val": v, "idx": ix, "lrow": lrow},
+                          tuple(factors), d, plan=plan, config=config)
+        out = jnp.take(out_rel, relabels[d], axis=0)  # un-relabel -> (I_d, R)
+        if fold is not None:
+            factors, carry = fold(d, out, factors, carry)
+        if pad_out_to is not None:
+            out = jnp.pad(out, ((0, pad_out_to - plan.dim), (0, 0)))
+
+        # Alg. 3: conflict-free scatter into the mode-(d+1) layout (pads
+        # parked at S_max -> dropped); slots beyond S_{d+1} stay empty.
+        dst = jnp.where(alive, al[:, nxt], smax)
+        nval = jnp.zeros((smax,), val.dtype).at[dst].set(
+            v, mode="drop", unique_indices=True)
+        nidx = jnp.zeros((smax, n), idx.dtype).at[dst].set(
+            ix, mode="drop", unique_indices=True)
+        nalpha = jnp.full((smax, n), -1, jnp.int32).at[dst].set(
+            al, mode="drop", unique_indices=True)
+        return (nval, nidx, nalpha), out, factors, carry
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# mttkrp: one mode, one dispatch.
+# --------------------------------------------------------------------------
+def mttkrp(state: EngineState, factors: Sequence[jax.Array],
+           mode: int | None = None):
+    """MTTKRP for the resident mode + remap to the next; returns
+    ``(out, next_state)``. ``mode`` (optional) must name the resident mode
+    — the layout physically *is* mode-``state.mode``'s."""
+    if mode is not None and mode != state.mode:
+        raise ValueError(
+            f"state holds the mode-{state.mode} layout; cannot compute "
+            f"mode {mode} without rotating (use all_modes or step to it)")
+    d = state.mode
+    key = ("mttkrp", state.aux_key())
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        step = _mode_branch(d, statics=state.statics, smax=state.smax,
+                            config=state.config, fold=None,
+                            pad_out_to=None)
+
+        def run(layout3, relabels, factors):
+            TRACE_COUNTS["mttkrp"] += 1  # trace-time side effect
+            nl, out, _, _ = step(layout3, relabels, factors, None)
+            return nl, out
+
+        donate = (0,) if state.config.resolve_donate() else ()
+        fn = _JIT_CACHE[key] = jax.jit(run, donate_argnums=donate)
+    DISPATCH_COUNTS["mttkrp"] += 1
+    (nval, nidx, nalpha), out = fn(
+        (state.val, state.idx, state.alpha), state.relabel, tuple(factors))
+    nxt = (d + 1) % state.nmodes
+    return out, state.replace(val=nval, idx=nidx, alpha=nalpha, mode=nxt)
+
+
+# --------------------------------------------------------------------------
+# all_modes: one jitted lax.scan over the full rotation.
+# --------------------------------------------------------------------------
+def _build_scan(state: EngineState, fold: FoldFn | None):
+    """The traced all-modes program (pre-jit, for jaxpr inspection).
+
+    Captures only the state's *static* aux (ints/tuples), never its device
+    arrays — the built function lives in the long-lived jit cache and must
+    not pin the first caller's layout buffers.
+    """
+    n, m0, smax, imax = state.nmodes, state.mode, state.smax, state.imax
+    dims = state.dims
+    seq = tuple((m0 + i) % n for i in range(n))
+    branches = [
+        _mode_branch(d, statics=state.statics, smax=smax,
+                     config=state.config, fold=fold, pad_out_to=imax)
+        for d in range(n)
+    ]
+
+    def run(layout3, relabels, factors, carry):
+        TRACE_COUNTS["all_modes"] += 1  # trace-time side effect
+
+        def body(sc, mode_t):
+            layout3, factors, carry = sc
+            nl, out, factors, carry = lax.switch(
+                mode_t,
+                [lambda l3, f, c, b=b: b(l3, relabels, f, c)
+                 for b in branches],
+                layout3, factors, carry)
+            return (nl, factors, carry), out
+
+        (layout3, factors, carry), outs = lax.scan(
+            body, (layout3, factors, carry),
+            jnp.asarray(seq, dtype=jnp.int32))
+        # outs[i] is mode seq[i], padded to imax rows; hand back per-mode
+        # views in mode order, statically sliced to each I_d.
+        by_mode = tuple(
+            outs[seq.index(d)][: dims[d]] for d in range(n))
+        return layout3, by_mode, factors, carry
+
+    return run
+
+
+def all_modes(state: EngineState, factors: Sequence[jax.Array], *,
+              fold: FoldFn | None = None, carry=None):
+    """spMTTKRP along all N modes as ONE jitted ``lax.scan`` dispatch.
+
+    Starts from the resident ``state.mode`` (any mode — the alpha tables
+    rotate the layout back to it by the end) and returns outputs indexed
+    by mode, i.e. ``outs[d]`` is the mode-``d`` MTTKRP of shape
+    ``(dims[d], R)``.
+
+    Without ``fold``: returns ``(outs, next_state)``.
+    With ``fold`` (stable module-level callable, see :data:`FoldFn`):
+    returns ``(outs, next_state, factors, carry)`` — the hook runs inside
+    the scan right after each mode's output, which is how an ALS sweep
+    stays a single traced program.
+    """
+    key = ("all_modes", state.aux_key(), fold)
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        donate = (0,) if state.config.resolve_donate() else ()
+        fn = _JIT_CACHE[key] = jax.jit(_build_scan(state, fold),
+                                       donate_argnums=donate)
+    DISPATCH_COUNTS["all_modes"] += 1
+    layout3, outs, out_factors, out_carry = fn(
+        (state.val, state.idx, state.alpha), state.relabel, tuple(factors),
+        carry)
+    nval, nidx, nalpha = layout3
+    next_state = state.replace(val=nval, idx=nidx, alpha=nalpha)
+    if fold is None:
+        return list(outs), next_state
+    return list(outs), next_state, list(out_factors), out_carry
+
+
+def scan_jaxpr(state: EngineState, factors: Sequence[jax.Array],
+               fold: FoldFn | None = None, carry=None):
+    """Jaxpr of the all-modes program (tests assert it is one scan)."""
+    return jax.make_jaxpr(_build_scan(state, fold))(
+        (state.val, state.idx, state.alpha), state.relabel, tuple(factors),
+        carry)
+
+
+__all__ = ["init", "mttkrp", "all_modes", "scan_jaxpr", "reset_counters",
+           "TRACE_COUNTS", "DISPATCH_COUNTS", "FoldFn"]

@@ -1,0 +1,142 @@
+"""Backend registry for the spMTTKRP elementwise computation (Alg. 2/4).
+
+Replaces the old string-typed ``backend=`` kwarg plumbing: a backend is a
+named entry in ``BACKENDS`` selected by ``ExecutionConfig.backend``. Every
+backend implements the same contract,
+
+    ec(layout, factors, mode, plan=ModeStatic, config=ExecutionConfig)
+        -> out_rel  (plan.relabeled_rows, R) f32
+
+where ``layout`` holds the mode-``mode`` kernel layout slices
+(``val (S_d,)``, ``idx (S_d, N)``, ``lrow (S_d,)``) and the result lives in
+relabeled row space (caller un-relabels with the mode's relabel table).
+
+Registered backends:
+  xla     fused segment-sum over the relabeled row space (default)
+  pallas  the fused one-hot-MXU Pallas kernel (interpret off-TPU)
+  ref     unfused oracle-shaped path: materialize the (S, R) Hadamard
+          partials, then segment-sum — the baseline the paper's fusion
+          argument (Fig. 7) is measured against
+"""
+from __future__ import annotations
+
+from typing import Callable, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from .config import ExecutionConfig
+from .state import ModeStatic
+
+
+class ECBackend(Protocol):
+    def __call__(self, layout: dict, factors: tuple, mode: int, *,
+                 plan: ModeStatic, config: ExecutionConfig) -> jax.Array: ...
+
+
+BACKENDS: dict[str, ECBackend] = {}
+
+
+def register_backend(name: str) -> Callable[[ECBackend], ECBackend]:
+    """Decorator: add an elementwise-computation backend to the registry."""
+
+    def deco(fn: ECBackend) -> ECBackend:
+        BACKENDS[name] = fn
+        return fn
+
+    return deco
+
+
+def get_backend(config_or_name: ExecutionConfig | str) -> ECBackend:
+    name = (config_or_name.backend
+            if isinstance(config_or_name, ExecutionConfig)
+            else config_or_name)
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown engine backend {name!r}; registered: "
+            f"{sorted(BACKENDS)}") from None
+
+
+# --------------------------------------------------------------------------
+# Shared pieces.
+# --------------------------------------------------------------------------
+def compute_lrow(idx_d, row_relabel_d, rows_pp: int, alive):
+    """Local row ids in the owning partition (relabel table lookup)."""
+    rel = jnp.take(row_relabel_d, idx_d, axis=0, mode="fill", fill_value=0)
+    return jnp.where(alive, rel % rows_pp, -1)
+
+
+def _gather_partials(layout, factors, mode: int, accum_dtype):
+    """ell(r) = val * prod_{w != d} Y_w[c_w, r]  (Alg. 2 lines 7-13)."""
+    val, idx = layout["val"], layout["idx"]
+    partials = val[:, None].astype(accum_dtype)
+    for w, f in enumerate(factors):
+        if w == mode:
+            continue
+        partials = partials * jnp.take(f, idx[:, w], axis=0, mode="fill",
+                                       fill_value=0.0).astype(accum_dtype)
+    return partials
+
+
+def _segment_ids(layout, plan: ModeStatic):
+    """Global relabeled row per slot; pads (lrow == -1) -> dump row 0."""
+    stride = plan.blocks_pp * plan.block_p
+    slot = jnp.arange(layout["val"].shape[0], dtype=jnp.int32)
+    part = slot // stride
+    lrow = layout["lrow"]
+    return jnp.where(lrow < 0, 0, part * plan.rows_pp + lrow)
+
+
+# --------------------------------------------------------------------------
+# Backends.
+# --------------------------------------------------------------------------
+@register_backend("xla")
+def ec_xla(layout, factors, mode: int, *, plan: ModeStatic,
+           config: ExecutionConfig) -> jax.Array:
+    """Fused XLA path: gather-multiply feeding segment-sum directly, so the
+    (S, R) partials never round-trip HBM as a named intermediate."""
+    partials = _gather_partials(layout, factors, mode, config.accum_dtype())
+    gid = _segment_ids(layout, plan)
+    return jax.ops.segment_sum(partials, gid,
+                               num_segments=plan.relabeled_rows)
+
+
+@register_backend("ref")
+def ec_ref(layout, factors, mode: int, *, plan: ModeStatic,
+           config: ExecutionConfig) -> jax.Array:
+    """Unfused baseline: materialize partials, then reduce (paper Fig. 7's
+    comparison point; also the oracle for backend parity tests)."""
+    partials = _gather_partials(layout, factors, mode, config.accum_dtype())
+    partials = jnp.asarray(partials)  # named intermediate, kept live
+    gid = _segment_ids(layout, plan)
+    return jax.ops.segment_sum(partials, gid,
+                               num_segments=plan.relabeled_rows)
+
+
+@register_backend("pallas")
+def ec_pallas(layout, factors, mode: int, *, plan: ModeStatic,
+              config: ExecutionConfig) -> jax.Array:
+    """Fused Pallas TPU kernel (one-hot MXU segment reduction in VMEM)."""
+    from repro.kernels import ops as kops
+
+    gathered = jnp.stack(
+        [jnp.take(f, layout["idx"][:, w], axis=0, mode="fill",
+                  fill_value=0.0)
+         for w, f in enumerate(factors) if w != mode],
+        axis=1)  # (S, N-1, R)
+    return kops.mttkrp_fused(
+        gathered,
+        layout["val"],
+        layout["lrow"],
+        kappa=plan.kappa,
+        rows_pp=plan.rows_pp,
+        blocks_pp=plan.blocks_pp,
+        block_p=plan.block_p,
+        interpret=config.resolve_interpret(),
+    )
+
+
+__all__ = ["BACKENDS", "register_backend", "get_backend", "compute_lrow",
+           "ec_xla", "ec_ref", "ec_pallas"]

@@ -1,0 +1,76 @@
+"""Execution configuration for the functional spMTTKRP engine.
+
+``ExecutionConfig`` is a *frozen* (hashable) dataclass: it rides in the
+static aux_data of :class:`repro.engine.state.EngineState`, so two states
+with different configs hash to different jit cache entries and nothing
+about execution policy is smuggled through mutable attributes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+# Kappa policies understood by ``engine.init`` when it has to *build* the
+# FLYCOO plans itself (raw COO input). "vmem" sizes partitions so a row
+# tile fits VMEM (the DESIGN.md default); "fixed" uses ``kappa`` verbatim.
+KAPPA_POLICIES = ("vmem", "fixed")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionConfig:
+    """Static execution policy for the engine (hashable, jit-cache safe).
+
+    Attributes:
+      backend: name in the backend registry (``xla`` | ``pallas`` | ``ref``).
+      interpret: Pallas interpret mode. ``None`` = auto (interpret everywhere
+        except on a real TPU), mirroring ``kernels.ops``.
+      block_p: nonzeros per kernel block when the engine builds plans itself
+        (paper's P; one sublane tile by default).
+      kappa_policy: how ``engine.init`` picks the partition count for raw
+        COO input — ``"vmem"`` (derive from rows_pp) or ``"fixed"``.
+      kappa: partition count used when ``kappa_policy == "fixed"``.
+      rows_pp: rows per partition for the ``"vmem"`` policy (``None`` =
+        library default).
+      precision: accumulation dtype name for the Hadamard partials
+        (``"float32"`` unless a later mixed-precision PR widens this).
+      donate: donate the layout buffers into the jitted scan (the paper's
+        T_in/T_out swap without a second live copy). ``None`` = auto:
+        donate only where XLA supports it (TPU/GPU).
+    """
+
+    backend: str = "xla"
+    interpret: bool | None = None
+    block_p: int = 128
+    kappa_policy: str = "vmem"
+    kappa: int | None = None
+    rows_pp: int | None = None
+    precision: str = "float32"
+    donate: bool | None = None
+
+    def __post_init__(self):
+        if self.kappa_policy not in KAPPA_POLICIES:
+            raise ValueError(
+                f"kappa_policy {self.kappa_policy!r} not in {KAPPA_POLICIES}")
+        if self.kappa_policy == "fixed" and self.kappa is None:
+            raise ValueError("kappa_policy='fixed' requires kappa")
+
+    # ------------------------------------------------------------ resolution
+    def resolve_interpret(self) -> bool:
+        if self.interpret is None:
+            return jax.default_backend() != "tpu"
+        return bool(self.interpret)
+
+    def resolve_donate(self) -> bool:
+        if self.donate is None:
+            # CPU XLA ignores donation and warns; keep auto mode quiet there.
+            return jax.default_backend() in ("tpu", "gpu")
+        return bool(self.donate)
+
+    def accum_dtype(self):
+        import jax.numpy as jnp
+
+        return jnp.dtype(self.precision)
+
+
+__all__ = ["ExecutionConfig", "KAPPA_POLICIES"]

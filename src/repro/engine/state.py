@@ -1,0 +1,111 @@
+"""Pytree engine state for the functional spMTTKRP engine.
+
+``EngineState`` is the device-resident half of a
+:class:`~repro.core.flycoo.FlycooTensor`: the *current* FLYCOO layout
+(val/idx/alpha), padded to the uniform slot count ``S_max = max_d S_d`` so
+the same pytree shape serves every mode — which is exactly what makes the
+mode loop a ``lax.scan`` carry and the T_in/T_out swap a buffer donation
+instead of a host round-trip.
+
+Array leaves (pytree children):
+  val      (S_max,)     f32   nonzero values, 0 in pads
+  idx      (S_max, N)   i32   beta — original per-mode indices, 0 in pads
+  alpha    (S_max, N)   i32   alpha — slot of the element in every mode
+                              layout (-1 in pads)
+  relabel  N x (I_d,)   i32   old row id -> relabeled row id, per mode
+
+Static aux_data (hashable, part of the jit cache key):
+  mode     int                 which mode's layout is resident
+  dims     tuple[int, ...]
+  statics  tuple[ModeStatic]   per-mode plan constants (kappa, rows_pp, ...)
+  config   ExecutionConfig
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+
+from .config import ExecutionConfig
+
+
+class ModeStatic(NamedTuple):
+    """Hashable subset of ``partition.ModePlan`` the kernels need."""
+
+    kappa: int
+    rows_pp: int
+    blocks_pp: int
+    block_p: int
+    dim: int
+
+    @property
+    def padded_nnz(self) -> int:
+        return self.kappa * self.blocks_pp * self.block_p
+
+    @property
+    def relabeled_rows(self) -> int:
+        return self.kappa * self.rows_pp
+
+
+def mode_static_from_plan(plan) -> ModeStatic:
+    return ModeStatic(kappa=plan.kappa, rows_pp=plan.rows_pp,
+                      blocks_pp=plan.blocks_pp, block_p=plan.block_p,
+                      dim=plan.dim)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class EngineState:
+    """Immutable, pytree-registered engine state (see module docstring)."""
+
+    val: jax.Array
+    idx: jax.Array
+    alpha: jax.Array
+    relabel: tuple[jax.Array, ...]
+    mode: int
+    dims: tuple[int, ...]
+    statics: tuple[ModeStatic, ...]
+    config: ExecutionConfig
+
+    # ------------------------------------------------------------ derived
+    @property
+    def nmodes(self) -> int:
+        return len(self.dims)
+
+    @property
+    def smax(self) -> int:
+        """Uniform physical slot count (max over per-mode padded sizes)."""
+        return max(s.padded_nnz for s in self.statics)
+
+    @property
+    def rmax(self) -> int:
+        """Max relabeled-row count over modes (scan output row padding)."""
+        return max(s.relabeled_rows for s in self.statics)
+
+    @property
+    def imax(self) -> int:
+        return max(self.dims)
+
+    def aux_key(self):
+        """Hashable key identifying every static property of this state."""
+        return (self.mode, self.dims, self.statics, self.config)
+
+    def replace(self, **kw) -> "EngineState":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------- pytree
+    def tree_flatten(self):
+        children = (self.val, self.idx, self.alpha, self.relabel)
+        aux = (self.mode, self.dims, self.statics, self.config)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        val, idx, alpha, relabel = children
+        mode, dims, statics, config = aux
+        return cls(val=val, idx=idx, alpha=alpha, relabel=tuple(relabel),
+                   mode=mode, dims=dims, statics=statics, config=config)
+
+
+__all__ = ["EngineState", "ModeStatic", "mode_static_from_plan"]

@@ -4,6 +4,12 @@ On a real TPU the kernels compile through Mosaic; on this CPU container we
 default to ``interpret=True`` (the kernel body runs as traced JAX ops) so
 correctness is validated end-to-end. Dry-run/roofline lowering uses the
 XLA reference paths so ``cost_analysis()`` reports honest HLO (DESIGN.md §6).
+
+Interpret resolution is policy, not plumbing: every wrapper accepts either
+an explicit ``interpret=`` or an :class:`repro.engine.ExecutionConfig`
+(``config=``) and defers to ``config.resolve_interpret()`` — the same
+policy object that keys the engine's backend registry, so kernel and
+engine can never disagree about execution mode.
 """
 from __future__ import annotations
 
@@ -19,25 +25,33 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def resolve_interpret(interpret: bool | None = None, config=None) -> bool:
+    """One resolution rule for all kernels: explicit flag > config policy >
+    platform default (interpret everywhere but TPU)."""
+    if interpret is not None:
+        return bool(interpret)
+    if config is not None:
+        return config.resolve_interpret()
+    return _default_interpret()
+
+
 def mttkrp_fused(gathered, val, lrow, *, kappa, rows_pp, blocks_pp, block_p,
-                 interpret: bool | None = None):
-    if interpret is None:
-        interpret = _default_interpret()
+                 interpret: bool | None = None, config=None):
     return _mttkrp_fused(gathered, val, lrow, kappa=kappa, rows_pp=rows_pp,
                          blocks_pp=blocks_pp, block_p=block_p,
-                         interpret=interpret)
+                         interpret=resolve_interpret(interpret, config))
 
 
-def lru_scan(a, x, *, chunk: int = 32, interpret: bool | None = None):
-    if interpret is None:
-        interpret = _default_interpret()
-    return _lru_scan(a, x, chunk=chunk, interpret=interpret)
+def lru_scan(a, x, *, chunk: int = 32, interpret: bool | None = None,
+             config=None):
+    return _lru_scan(a, x, chunk=chunk,
+                     interpret=resolve_interpret(interpret, config))
 
 
-def wkv6(r, k, w, v, u, *, chunk: int = 16, interpret: bool | None = None):
-    if interpret is None:
-        interpret = _default_interpret()
-    return _wkv6(r, k, w, v, u, chunk=chunk, interpret=interpret)
+def wkv6(r, k, w, v, u, *, chunk: int = 16, interpret: bool | None = None,
+         config=None):
+    return _wkv6(r, k, w, v, u, chunk=chunk,
+                 interpret=resolve_interpret(interpret, config))
 
 
-__all__ = ["mttkrp_fused", "lru_scan", "wkv6", "ref"]
+__all__ = ["mttkrp_fused", "lru_scan", "wkv6", "ref", "resolve_interpret"]

@@ -1,0 +1,243 @@
+"""Functional engine API: pytree EngineState + ExecutionConfig + scan.
+
+Covers the acceptance criteria of the engine redesign:
+  * ``engine.all_modes`` is ONE jitted ``lax.scan`` program (trace count
+    stays 1 across calls; jaxpr contains a scan; dispatch count is 1 per
+    full rotation instead of nmodes);
+  * ``EngineState`` round-trips through ``jax.tree_util.tree_flatten``;
+  * xla vs pallas-interpret parity for nmodes 3..6 (the paper's >4-mode
+    claim previously had no test above 4 modes);
+  * the deprecated ``MTTKRPExecutor`` shim matches ``mttkrp_ref`` on all
+    modes for nmodes 3..6, works from any start mode, and ``reset()``
+    restores mode 0 (regression for the removed mode-0 assertion).
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import (MTTKRPExecutor, build_flycoo, cp_als,
+                        cp_als_reference, init_factors, mttkrp_ref)
+from repro.engine import EngineState, ExecutionConfig
+
+DIMS_BY_NMODES = {
+    3: (23, 17, 11),
+    4: (13, 11, 7, 9),
+    5: (9, 8, 7, 6, 5),
+    6: (7, 6, 5, 4, 3, 8),
+}
+
+
+def _tensor(seed, dims, nnz, **kw):
+    rng = np.random.default_rng(seed)
+    idx = np.unique(np.stack([rng.integers(0, d, nnz) for d in dims], 1)
+                    .astype(np.int32), axis=0)
+    val = rng.standard_normal(idx.shape[0]).astype(np.float32)
+    return idx, val, build_flycoo(idx, val, dims, **kw)
+
+
+def _refs(idx, val, factors, dims):
+    return [mttkrp_ref(jnp.asarray(idx), jnp.asarray(val), factors, d,
+                       dims[d]) for d in range(len(dims))]
+
+
+# --------------------------------------------------------------------------
+# Backend parity across mode counts (incl. the paper's >4-mode claim).
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["xla", "pallas", "ref"])
+@pytest.mark.parametrize("nmodes", [3, 4, 5, 6])
+def test_all_modes_backend_parity(backend, nmodes):
+    dims = DIMS_BY_NMODES[nmodes]
+    idx, val, t = _tensor(nmodes, dims, 700, rows_pp=4, block_p=8)
+    factors = tuple(init_factors(jax.random.PRNGKey(1), dims, 8))
+    state = engine.init(t, ExecutionConfig(backend=backend, interpret=True))
+    refs = _refs(idx, val, factors, dims)
+    for _ in range(2):  # second sweep exercises remapped layouts
+        outs, state = engine.all_modes(state, factors)
+        for d in range(nmodes):
+            np.testing.assert_allclose(outs[d], refs[d], rtol=2e-4,
+                                       atol=2e-4)
+
+
+@pytest.mark.parametrize("nmodes", [3, 4, 5, 6])
+def test_single_mode_step_and_any_start(nmodes):
+    """Stepping through modes one dispatch at a time matches the oracle,
+    and a rotation may start anywhere (no mode-0 restriction)."""
+    dims = DIMS_BY_NMODES[nmodes]
+    idx, val, t = _tensor(nmodes + 10, dims, 500, rows_pp=4, block_p=8)
+    factors = tuple(init_factors(jax.random.PRNGKey(2), dims, 4))
+    refs = _refs(idx, val, factors, dims)
+
+    state = engine.init(t)
+    for d in range(nmodes):
+        out, state = engine.mttkrp(state, factors)
+        np.testing.assert_allclose(out, refs[d], rtol=2e-4, atol=2e-4)
+    assert state.mode == 0
+
+    start = nmodes - 1
+    state = engine.init(t, start_mode=start)
+    outs, state = engine.all_modes(state, factors)
+    assert state.mode == start
+    for d in range(nmodes):
+        np.testing.assert_allclose(outs[d], refs[d], rtol=2e-4, atol=2e-4)
+
+
+def test_mttkrp_rejects_nonresident_mode():
+    dims = DIMS_BY_NMODES[3]
+    _, _, t = _tensor(0, dims, 300, rows_pp=4, block_p=8)
+    factors = tuple(init_factors(jax.random.PRNGKey(0), dims, 4))
+    state = engine.init(t)
+    with pytest.raises(ValueError, match="mode-0 layout"):
+        engine.mttkrp(state, factors, mode=2)
+
+
+# --------------------------------------------------------------------------
+# Scan program: one trace, one dispatch per rotation, scan in the jaxpr.
+# --------------------------------------------------------------------------
+def test_all_modes_is_single_scanned_dispatch():
+    dims = DIMS_BY_NMODES[4]
+    idx, val, t = _tensor(1, dims, 600, rows_pp=4, block_p=8)
+    factors = tuple(init_factors(jax.random.PRNGKey(3), dims, 8))
+    state = engine.init(t)
+
+    engine.reset_counters()
+    for _ in range(3):
+        outs, state = engine.all_modes(state, factors)
+    # one traced program, reused; one dispatch per full rotation — the
+    # old executor issued nmodes dispatches per rotation.
+    assert engine.TRACE_COUNTS["all_modes"] == 1
+    assert engine.DISPATCH_COUNTS["all_modes"] == 3
+
+    jaxpr = str(engine.scan_jaxpr(state, factors))
+    assert "scan" in jaxpr, "all_modes must lower to a lax.scan program"
+
+
+# --------------------------------------------------------------------------
+# Pytree contract.
+# --------------------------------------------------------------------------
+def test_engine_state_pytree_roundtrip():
+    dims = DIMS_BY_NMODES[4]
+    idx, val, t = _tensor(2, dims, 400, rows_pp=4, block_p=8)
+    state = engine.init(t, ExecutionConfig(backend="xla"))
+
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    assert all(isinstance(x, jax.Array) for x in leaves)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(rebuilt, EngineState)
+    assert rebuilt.aux_key() == state.aux_key()
+    for a, b in zip(leaves, jax.tree_util.tree_leaves(rebuilt)):
+        np.testing.assert_array_equal(a, b)
+
+    # states pass transparently through jax transformations
+    doubled = jax.tree_util.tree_map(lambda x: x * 2, state)
+    np.testing.assert_allclose(doubled.val, state.val * 2)
+    assert doubled.statics == state.statics
+
+
+def test_execution_config_static_and_validated():
+    assert hash(ExecutionConfig()) == hash(ExecutionConfig())
+    assert ExecutionConfig(backend="pallas") != ExecutionConfig()
+    with pytest.raises(ValueError, match="kappa_policy"):
+        ExecutionConfig(kappa_policy="bogus")
+    with pytest.raises(ValueError, match="requires kappa"):
+        ExecutionConfig(kappa_policy="fixed")
+    with pytest.raises(KeyError, match="unknown engine backend"):
+        engine.get_backend("cuda")
+
+
+def test_init_from_raw_coo_uses_config_policy():
+    dims = (19, 13, 7)
+    rng = np.random.default_rng(5)
+    idx = np.unique(np.stack([rng.integers(0, d, 300) for d in dims], 1)
+                    .astype(np.int32), axis=0)
+    val = rng.standard_normal(idx.shape[0]).astype(np.float32)
+    cfg = ExecutionConfig(kappa_policy="fixed", kappa=2, block_p=8)
+    state = engine.init((idx, val, dims), cfg)
+    assert all(s.kappa == 2 for s in state.statics)
+    factors = tuple(init_factors(jax.random.PRNGKey(0), dims, 4))
+    outs, _ = engine.all_modes(state, factors)
+    for d in range(3):
+        ref = mttkrp_ref(jnp.asarray(idx), jnp.asarray(val), factors, d,
+                         dims[d])
+        np.testing.assert_allclose(outs[d], ref, rtol=2e-4, atol=2e-4)
+
+
+def test_backend_registry_is_extensible():
+    name = "_test_zeros"
+    try:
+        @engine.register_backend(name)
+        def _zeros(layout, factors, mode, *, plan, config):
+            r = factors[0].shape[1]
+            return jnp.zeros((plan.relabeled_rows, r), jnp.float32)
+
+        dims = DIMS_BY_NMODES[3]
+        _, _, t = _tensor(4, dims, 200, rows_pp=4, block_p=8)
+        factors = tuple(init_factors(jax.random.PRNGKey(0), dims, 4))
+        state = engine.init(t, ExecutionConfig(backend=name))
+        outs, _ = engine.all_modes(state, factors)
+        for o in outs:
+            np.testing.assert_array_equal(np.asarray(o), 0.0)
+    finally:
+        engine.BACKENDS.pop(name, None)
+
+
+# --------------------------------------------------------------------------
+# Deprecated shim: oracle parity 3..6 modes, partial rotation + reset.
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("nmodes", [3, 4, 5, 6])
+def test_deprecated_shim_matches_oracle(nmodes):
+    dims = DIMS_BY_NMODES[nmodes]
+    idx, val, t = _tensor(nmodes, dims, 700, rows_pp=4, block_p=8)
+    factors = init_factors(jax.random.PRNGKey(1), dims, 8)
+    with pytest.deprecated_call():
+        exe = MTTKRPExecutor(t)
+    outs = exe.all_modes(factors)
+    refs = _refs(idx, val, factors, dims)
+    for d in range(nmodes):
+        np.testing.assert_allclose(outs[d], refs[d], rtol=2e-4, atol=2e-4)
+
+
+def test_shim_partial_rotation_reset_regression():
+    """Step a partial rotation, reset, and match the oracle — the old
+    executor hard-asserted ``current_mode == 0`` in all_modes."""
+    dims = DIMS_BY_NMODES[4]
+    idx, val, t = _tensor(9, dims, 600, rows_pp=4, block_p=8)
+    factors = init_factors(jax.random.PRNGKey(4), dims, 8)
+    refs = _refs(idx, val, factors, dims)
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        exe = MTTKRPExecutor(t)
+    np.testing.assert_allclose(exe.step(factors), refs[0], rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(exe.step(factors), refs[1], rtol=2e-4,
+                               atol=2e-4)
+    assert exe.current_mode == 2
+
+    outs = exe.all_modes(factors)  # mid-rotation: previously an assert
+    for d in range(4):
+        np.testing.assert_allclose(outs[d], refs[d], rtol=2e-4, atol=2e-4)
+    assert exe.current_mode == 2
+
+    exe.reset()
+    assert exe.current_mode == 0
+    np.testing.assert_allclose(exe.step(factors), refs[0], rtol=2e-4,
+                               atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# CPD on the scanned engine.
+# --------------------------------------------------------------------------
+def test_cp_als_with_config_matches_reference():
+    dims = (24, 18, 12)
+    idx, val, t = _tensor(11, dims, 800, rows_pp=8, block_p=16)
+    res = cp_als(t, rank=6, iters=4,
+                 config=ExecutionConfig(backend="xla"))
+    ref = cp_als_reference(idx, val, dims, 6, iters=4)
+    assert res.fits == pytest.approx(ref.fits, abs=2e-3)
+    with pytest.raises(ValueError, match="not both"):
+        cp_als(t, rank=4, iters=1, config=ExecutionConfig(),
+               backend="pallas")
