@@ -1,0 +1,101 @@
+"""fig11: weak-scaling multi-device sweep (engine.dist).
+
+For 1/2/4/8 fake CPU devices, grow the tensor with the device count
+(fixed nnz and mode-0 rows per device) and measure one distributed
+all-modes rotation plus the per-mode remap-exchange wire traffic of the
+two strategies: the precomputed collective_permute schedule vs the
+all_gather-the-element-list baseline. Traffic comes from the static
+:class:`~repro.engine.dist.ExchangeSchedule` (host-side truth — identical
+on real hardware); wall-clock runs in a subprocess so each point gets its
+own ``--xla_force_host_platform_device_count``.
+
+Rows: ``fig11/weak_scale_dev{n},us_per_call,permute_KB=..;all_gather_KB=..``
+with the per-mode byte split recorded in ``benchmarks/out/results.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import emit
+
+DEVICES = (1, 2, 4, 8)
+NNZ_PER_DEV = 3000
+DIM0_PER_DEV = 96
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_CHILD = """
+import os
+n_dev = int(os.environ["FIG11_NDEV"])
+os.environ["XLA_FLAGS"] = \\
+    f"--xla_force_host_platform_device_count={n_dev}"
+import json, time
+import jax
+import numpy as np
+from repro import engine
+from repro.core import init_factors
+from repro.core.distributed import build_sharded_flycoo
+from repro.engine.dist import exchange_bytes
+from repro.launch.mesh import make_mesh
+
+nnz = int(os.environ["FIG11_NNZ"])
+dims = (int(os.environ["FIG11_DIM0"]), 64, 48)
+rng = np.random.default_rng(0)
+idx = np.unique(np.stack([rng.integers(0, d, nnz) for d in dims], 1)
+                .astype(np.int32), axis=0)
+val = rng.standard_normal(idx.shape[0]).astype(np.float32)
+t = build_sharded_flycoo(idx, val, dims, n_dev=n_dev, rows_pp=8, block_p=8)
+factors = tuple(init_factors(jax.random.PRNGKey(0), dims, 16))
+state = engine.init(t)
+if n_dev == 1:
+    st, run = state, lambda s: engine.all_modes(s, factors)
+    per_mode = [dict(mode=d, permute_bytes=0, all_gather_bytes=0)
+                for d in range(len(dims))]
+else:
+    mesh = make_mesh((n_dev,), ("data",))
+    st = engine.dist.shard_state(state, mesh)
+    per_mode = exchange_bytes(st.schedule, len(dims), st.slocs)
+    run = lambda s: engine.dist.dist_all_modes(s, factors)
+outs, st = run(st)  # compile + warm
+jax.block_until_ready(outs)
+ts = []
+for _ in range(3):
+    t0 = time.perf_counter()
+    outs, st = run(st)
+    jax.block_until_ready(outs)
+    ts.append(time.perf_counter() - t0)
+print(json.dumps({"us": float(np.median(ts)) * 1e6,
+                  "nnz": int(val.shape[0]), "per_mode": per_mode}))
+"""
+
+
+def _point(n_dev: int) -> dict:
+    env = dict(os.environ,
+               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""),
+               FIG11_NDEV=str(n_dev),
+               FIG11_NNZ=str(NNZ_PER_DEV * n_dev),
+               FIG11_DIM0=str(DIM0_PER_DEV * n_dev))
+    out = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                         capture_output=True, text=True, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(f"fig11 child (n_dev={n_dev}) failed:\n"
+                           f"{out.stderr}")
+    return json.loads(out.stdout.splitlines()[-1])
+
+
+def run() -> None:
+    rows = []
+    for n_dev in DEVICES:
+        rec = _point(n_dev)
+        pk = sum(m["permute_bytes"] for m in rec["per_mode"]) / 1024
+        ak = sum(m["all_gather_bytes"] for m in rec["per_mode"]) / 1024
+        rows.append((
+            f"fig11/weak_scale_dev{n_dev}",
+            rec["us"],
+            f"permute_KB_per_dev={pk:.1f};all_gather_KB_per_dev={ak:.1f}",
+            {"n_dev": n_dev, "nnz": rec["nnz"],
+             "per_mode_exchange": rec["per_mode"]},
+        ))
+    emit(rows)

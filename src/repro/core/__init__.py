@@ -19,7 +19,14 @@ block_p, kappa policy, precision, donation):
 single jitted ``lax.scan`` with donated layout buffers — the T_in/T_out
 swap without host round-trips — and works from any resident mode.
 
-Migration from the deprecated stateful executor:
+Multi-device execution lives in :mod:`repro.engine.dist`: ``shard_state``
+places an ``EngineState`` over a mesh's ``data`` axis and
+``dist_all_modes`` runs the rotation as one scanned ``shard_map`` program,
+exchanging the remap via a precomputed static ``collective_permute``
+schedule (the old per-mode ``all_gather`` of the full element list remains
+as ``DistConfig(exchange="all_gather")`` for comparison).
+
+Migration from the deprecated stateful executors:
 
   ===============================  =====================================
   old (stateful, deprecated)       new (functional)
@@ -32,6 +39,12 @@ Migration from the deprecated stateful executor:
   ``exe.layout`` / ``current_mode``  ``s.val``/``s.idx``/``s.alpha`` /
                                      ``s.mode``
   ``backend="..."`` kwargs         ``ExecutionConfig`` + backend registry
+  ``DistributedMTTKRP(t, mesh)``   ``ds = engine.dist.shard_state(
+                                   engine.init(t), mesh)``
+  ``dist_exe.step(factors)``       ``out, ds = engine.dist.dist_mttkrp(
+                                   ds, factors)``
+  ``dist_exe.all_modes(factors)``  ``outs, ds = engine.dist.
+                                   dist_all_modes(ds, factors)``
   ===============================  =====================================
 """
 from .flycoo import FlycooTensor, build_flycoo

@@ -82,11 +82,21 @@ def cp_als(
     backend: str | None = None,
     interpret: bool | None = None,
     track_fit: bool = True,
+    mesh=None,
+    dist=None,
 ) -> CPDResult:
     """Run CPD-ALS for ``iters`` sweeps over all modes (paper Alg. 5 outer).
 
     Execution policy comes from ``config``; ``backend``/``interpret`` are
     legacy conveniences that build one (mutually exclusive with ``config``).
+
+    With ``mesh`` (a ``jax.sharding.Mesh`` or ``repro.sharding.ShardingCtx``)
+    the engine state shards over the mesh's data axis and every sweep runs
+    as ONE ``engine.dist.dist_all_modes`` program — the same scanned fold,
+    distributed. ``tensor``'s partition counts must divide over the mesh
+    (build with ``core.distributed.build_sharded_flycoo``); ``dist`` is an
+    optional ``engine.DistConfig`` (its ``model_axis`` must stay ``None`` —
+    the ALS fold needs the full rank on every device).
     """
     if config is None:
         config = ExecutionConfig(backend=backend or "xla",
@@ -99,12 +109,24 @@ def cp_als(
     factors = tuple(init_factors(key, tensor.dims, rank))
     lam = jnp.ones((rank,), jnp.float32)
     state = engine.init(tensor, config)
+    sweep = engine.all_modes
+    if mesh is not None:
+        from repro.sharding import ShardingCtx
+
+        if dist is None and isinstance(mesh, ShardingCtx):
+            # ALS folds inside the sweep, which needs the full rank on
+            # every device — never inherit the ctx's tp axis here.
+            dist = engine.DistConfig(data_axis=mesh.data_axis)
+        state = engine.dist.shard_state(state, mesh, dist)
+        sweep = engine.dist.dist_all_modes
+    elif dist is not None:
+        raise ValueError("dist config given without a mesh")
     norm_x_sq = float(np.sum(tensor.values.astype(np.float64) ** 2))
 
     fits = []
     for _ in range(iters):
         # One dispatch per sweep: scan over modes, ALS update in the fold.
-        outs, state, factors, lam = engine.all_modes(
+        outs, state, factors, lam = sweep(
             state, factors, fold=_als_fold, carry=lam)
         if track_fit:
             fits.append(_fit(norm_x_sq, outs[n - 1], factors, lam))

@@ -1,173 +1,118 @@
-"""Distributed spMTTKRP via shard_map (DESIGN.md §6).
+"""Distributed spMTTKRP — deprecated stateful shims over ``repro.engine.dist``.
 
-Cluster-scope version of the paper's Observation 2: partitions (and hence
-their owned output rows) are dealt to devices along the ``data`` axis, so
-elementwise computation needs NO cross-device reduction — each device
-segment-sums into rows it exclusively owns. The rank dimension optionally
-shards over ``model`` (MTTKRP is embarrassingly parallel over rank; only
-the R x R grams need cross-rank collectives, and R is tiny).
+The implementation moved to :mod:`repro.engine.dist`: a sharded pytree
+``DistState`` (``shard_state``) executed by pure functions
+(``dist_mttkrp`` / ``dist_all_modes`` — the latter ONE jitted ``lax.scan``
+under ``shard_map``), with the dynamic remap exchanged via a precomputed
+static ``collective_permute`` schedule instead of this module's original
+``all_gather`` of the full element list (that baseline survives as
+``DistConfig(exchange="all_gather")`` for measurement). See DESIGN.md §6
+and the migration table in :mod:`repro.core`.
 
-Dynamic remapping across devices (an element's next-mode partition may live
-on another device) is a static permutation; the baseline implementation
-exchanges via all_gather + local scatter-slice. A collective_permute
-schedule over the known exchange pattern is the documented optimization.
+This module keeps the original surface alive:
+
+  * :func:`build_sharded_flycoo` — FLYCOO preprocessing with per-device
+    partition rounding, now delegating to
+    :meth:`repro.engine.ExecutionConfig.kappa_for`;
+  * :class:`DistributedMTTKRP` — a thin deprecation shim over the new
+    subsystem (mirroring how ``MTTKRPExecutor`` shims ``repro.engine``).
+    Unlike the original it works from *any* resident mode (the
+    ``current_mode == 0`` assertion is gone) and gained ``reset()``.
+
+New code should import from :mod:`repro.engine.dist`.
 """
 from __future__ import annotations
 
-import functools
+import warnings
+from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from .flycoo import FlycooTensor, build_flycoo
-from .mttkrp import compute_lrow
+from repro import engine as _engine
+from repro.engine import ExecutionConfig
+from repro.engine.dist import (DistConfig, dist_all_modes, dist_mttkrp,
+                               shard_map, shard_state)  # noqa: F401
 
-try:
-    from jax import shard_map as _shard_map
-
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _shard_map(f, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, check_vma=False)
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map_old
-
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
-                              out_specs=out_specs, check_rep=False)
-
-P = jax.sharding.PartitionSpec
+from .flycoo import FlycooTensor
+from .partition import plan_mode
 
 
 def build_sharded_flycoo(indices, values, dims, n_dev: int,
-                         rows_pp: int = 512, block_p: int = 128,
-                         parts_per_dev: int | None = None) -> FlycooTensor:
+                         rows_pp: int = 512,
+                         block_p: int = 128) -> FlycooTensor:
     """FLYCOO preprocessing with kappa forced to a multiple of n_dev, so
-    each device owns an equal, contiguous run of partitions/rows/slots."""
-    import math
-
-    from .partition import plan_mode
-
+    each device owns an equal, contiguous run of partitions/rows/slots.
+    The rounding rule lives in :meth:`ExecutionConfig.kappa_for`."""
     indices = np.asarray(indices, np.int32)
     values = np.asarray(values, np.float32)
-    plans = []
-    for d in range(len(dims)):
-        kappa = max(1, math.ceil(dims[d] / rows_pp))
-        kappa = max(n_dev, ((kappa + n_dev - 1) // n_dev) * n_dev)
-        plans.append(plan_mode(indices[:, d], int(dims[d]), d, kappa=kappa,
-                               block_p=block_p))
-    t = FlycooTensor(tuple(int(x) for x in dims), indices, values, plans)
-    return t
+    cfg = ExecutionConfig(rows_pp=rows_pp, block_p=block_p)
+    plans = [
+        plan_mode(indices[:, d], int(dims[d]), d,
+                  kappa=cfg.kappa_for(int(dims[d]), n_dev), block_p=block_p)
+        for d in range(len(dims))
+    ]
+    return FlycooTensor(tuple(int(x) for x in dims), indices, values, plans)
 
 
 class DistributedMTTKRP:
-    """Alg. 5 with partitions sharded over the mesh's ``data`` axis and
-    (optionally) rank over ``model``."""
+    """DEPRECATED stateful wrapper around :mod:`repro.engine.dist`.
+
+    Threads an immutable sharded ``DistState`` through the functional API.
+    ``all_modes`` works from *any* resident mode and ``reset()`` returns to
+    the pristine start-mode layout, matching the ``MTTKRPExecutor`` shim.
+    The remap exchange defaults to the collective_permute schedule; pass
+    ``exchange="all_gather"`` for the original baseline.
+    """
 
     def __init__(self, tensor: FlycooTensor, mesh, data_axis: str = "data",
-                 model_axis: str | None = None):
+                 model_axis: str | None = None, exchange: str = "permute"):
+        warnings.warn(
+            "DistributedMTTKRP is deprecated; use repro.engine.dist "
+            "(shard_state/dist_mttkrp/dist_all_modes) — see repro.core "
+            "docstring for the migration table", DeprecationWarning,
+            stacklevel=2)
         self.tensor = tensor
         self.mesh = mesh
         self.da = data_axis
         self.ma = model_axis
         self.n_dev = mesh.shape[data_axis]
-        for p in tensor.plans:
-            assert p.kappa % self.n_dev == 0, (p.kappa, self.n_dev)
-        self.row_relabel = [jnp.asarray(p.row_relabel) for p in tensor.plans]
-        arrs = tensor.layout_arrays(0)
-        alpha = np.stack([self._alpha_for_mode(d)
-                          for d in range(tensor.nmodes)], axis=1)
-        dev = jax.sharding.NamedSharding(mesh, P(data_axis))
-        dev2 = jax.sharding.NamedSharding(mesh, P(data_axis, None))
-        self.layout = {
-            "val": jax.device_put(jnp.asarray(arrs["val"]), dev),
-            "idx": jax.device_put(jnp.asarray(arrs["idx"]), dev2),
-            "alpha": jax.device_put(jnp.asarray(alpha), dev2),
-        }
-        self.current_mode = 0
+        self.config = ExecutionConfig()
+        self.dist = DistConfig(data_axis=data_axis, model_axis=model_axis,
+                               exchange=exchange)
+        self._dstate = shard_state(_engine.init(tensor, self.config), mesh,
+                                   self.dist)
+        self.row_relabel = list(self._dstate.relabel)
 
-    def _alpha_for_mode(self, d: int) -> np.ndarray:
-        p0, pd = self.tensor.plans[0], self.tensor.plans[d]
-        col = np.full(p0.padded_nnz, -1, dtype=np.int32)
-        col[p0.slot_of_elem] = pd.slot_of_elem.astype(np.int32)
-        return col
+    # ------------------------------------------------------------ state view
+    @property
+    def state(self):
+        """The underlying functional ``DistState`` (read-only)."""
+        return self._dstate
 
-    def step(self, factors):
-        d = self.current_mode
-        plan = self.tensor.plans[d]
-        nxt = (d + 1) % self.tensor.nmodes
-        nplan = self.tensor.plans[nxt]
-        out_rel, self.layout = _sharded_mode_step(
-            self.layout, tuple(factors), self.row_relabel[d],
-            mesh=self.mesh, da=self.da, ma=self.ma, mode=d,
-            rows_pp=plan.rows_pp, blocks_pp=plan.blocks_pp,
-            block_p=plan.block_p, kappa=plan.kappa,
-            next_size=nplan.padded_nnz, nmodes=self.tensor.nmodes)
-        out = jnp.take(out_rel, self.row_relabel[d], axis=0)
-        self.current_mode = nxt
+    @property
+    def current_mode(self) -> int:
+        return self._dstate.mode
+
+    @property
+    def layout(self) -> dict:
+        """Mesh-sharded global layout arrays (device-major numbering)."""
+        return {"val": self._dstate.val, "idx": self._dstate.idx,
+                "alpha": self._dstate.alpha}
+
+    # ------------------------------------------------------------ execution
+    def step(self, factors: Sequence[jax.Array]) -> jax.Array:
+        """MTTKRP for the current mode + cross-device remap; rotate."""
+        out, self._dstate = dist_mttkrp(self._dstate, tuple(factors))
         return out
 
-    def all_modes(self, factors):
-        assert self.current_mode == 0
-        return [self.step(factors) for _ in range(self.tensor.nmodes)]
+    def all_modes(self, factors: Sequence[jax.Array]) -> list[jax.Array]:
+        """All-modes MTTKRP (one scanned shard_map dispatch), from ANY
+        current mode; returns outputs indexed by mode d."""
+        outs, self._dstate = dist_all_modes(self._dstate, tuple(factors))
+        return outs
 
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("mesh", "da", "ma", "mode", "rows_pp", "blocks_pp",
-                     "block_p", "kappa", "next_size", "nmodes"))
-def _sharded_mode_step(layout, factors, row_relabel_d, *, mesh, da, ma,
-                       mode, rows_pp, blocks_pp, block_p, kappa, next_size,
-                       nmodes):
-    n_dev = mesh.shape[da]
-    kappa_loc = kappa // n_dev
-    stride = blocks_pp * block_p
-
-    fac_spec = P(None, ma) if ma else P(None, None)
-
-    def local_fn(val, idx, alpha, rr, *facs):
-        # ---- elementwise computation on owned partitions (Obs. 2). ----
-        alive = alpha[:, mode] >= 0
-        lrow = compute_lrow(idx[:, mode], rr, rows_pp, alive)
-        partials = val[:, None].astype(jnp.float32)
-        for w, f in enumerate(facs):
-            if w == mode:
-                continue
-            partials = partials * jnp.take(f, idx[:, w], axis=0,
-                                           mode="fill", fill_value=0.0)
-        slot = jnp.arange(val.shape[0], dtype=jnp.int32)
-        part = slot // stride                      # local partition id
-        gid = jnp.where(lrow < 0, 0, part * rows_pp + lrow)
-        out_loc = jax.ops.segment_sum(
-            partials, gid, num_segments=kappa_loc * rows_pp)
-
-        # ---- dynamic remapping (Obs. 1): static permutation exchange. ----
-        # Baseline: all_gather elements, scatter into the full next layout,
-        # keep the local slice. (collective_permute schedule = future opt.)
-        vg = jax.lax.all_gather(val, da, tiled=True)
-        ig = jax.lax.all_gather(idx, da, tiled=True)
-        ag = jax.lax.all_gather(alpha, da, tiled=True)
-        alive_g = ag[:, mode] >= 0
-        dst = jnp.where(alive_g, ag[:, (mode + 1) % nmodes], next_size)
-        nval = jnp.zeros((next_size,), jnp.float32).at[dst].set(
-            vg, mode="drop")
-        nidx = jnp.zeros((next_size, nmodes), jnp.int32).at[dst].set(
-            ig, mode="drop")
-        nalpha = jnp.full((next_size, nmodes), -1, jnp.int32).at[dst].set(
-            ag, mode="drop")
-        shard_sz = next_size // n_dev
-        me = jax.lax.axis_index(da)
-        sl = lambda a: jax.lax.dynamic_slice_in_dim(  # noqa: E731
-            a, me * shard_sz, shard_sz, axis=0)
-        return out_loc, sl(nval), sl(nidx), sl(nalpha)
-
-    out_specs = (P(da, ma) if ma else P(da, None),
-                 P(da), P(da, None), P(da, None))
-    out_loc, nval, nidx, nalpha = shard_map(
-        local_fn, mesh,
-        in_specs=(P(da), P(da, None), P(da, None), P(None),
-                  *([fac_spec] * len(factors))),
-        out_specs=out_specs,
-    )(layout["val"], layout["idx"], layout["alpha"], row_relabel_d,
-      *factors)
-    return out_loc, {"val": nval, "idx": nidx, "alpha": nalpha}
+    def reset(self) -> None:
+        """Return to the pristine start-mode sharded layout."""
+        self._dstate = shard_state(_engine.init(self.tensor, self.config),
+                                   self.mesh, self.dist)

@@ -11,6 +11,10 @@ Public surface:
   BACKENDS / register_backend / get_backend
                                    elementwise-computation backend registry
                                    (replaces string-typed ``backend=`` kwargs)
+  dist (DistConfig / shard_state / dist_mttkrp / dist_all_modes)
+                                   multi-device subsystem: EngineState sharded
+                                   under shard_map, remap exchanged via a
+                                   static collective_permute schedule
 
 Migration from the deprecated stateful executor:
 
@@ -25,10 +29,15 @@ from .backends import (BACKENDS, register_backend, get_backend,
                        compute_lrow)
 from .api import (init, mttkrp, all_modes, scan_jaxpr, reset_counters,
                   TRACE_COUNTS, DISPATCH_COUNTS, FoldFn)
+from . import dist
+from .dist import (DistConfig, DistState, ExchangeSchedule, shard_state,
+                   dist_mttkrp, dist_all_modes)
 
 __all__ = [
     "ExecutionConfig", "KAPPA_POLICIES", "EngineState", "ModeStatic",
     "mode_static_from_plan", "BACKENDS", "register_backend", "get_backend",
     "compute_lrow", "init", "mttkrp", "all_modes", "scan_jaxpr",
     "reset_counters", "TRACE_COUNTS", "DISPATCH_COUNTS", "FoldFn",
+    "dist", "DistConfig", "DistState", "ExchangeSchedule", "shard_state",
+    "dist_mttkrp", "dist_all_modes",
 ]

@@ -8,6 +8,7 @@ about execution policy is smuggled through mutable attributes.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 
@@ -71,6 +72,32 @@ class ExecutionConfig:
         import jax.numpy as jnp
 
         return jnp.dtype(self.precision)
+
+    def kappa_for(self, dim: int, n_dev: int = 1) -> int:
+        """Partition count for a mode of size ``dim`` under this config's
+        kappa policy, rounded so each of ``n_dev`` devices owns an equal,
+        contiguous run of partitions (``kappa % n_dev == 0`` and
+        ``kappa <= dim``, so ``plan_mode`` never clamps it).
+
+        This is the single source of the per-device rounding rule — the
+        engine, ``core.distributed.build_sharded_flycoo``, and benchmarks
+        all derive their sharded partition counts from it.
+        """
+        if self.kappa_policy == "fixed":
+            base = self.kappa
+        else:
+            from repro.core.partition import choose_kappa
+
+            base = choose_kappa(
+                dim, self.rows_pp) if self.rows_pp else choose_kappa(dim)
+        if n_dev <= 1:
+            return min(base, dim)
+        if dim < n_dev:
+            raise ValueError(
+                f"mode of size {dim} cannot shard over {n_dev} devices "
+                "(fewer rows than devices)")
+        kappa = max(n_dev, math.ceil(base / n_dev) * n_dev)
+        return min(kappa, (dim // n_dev) * n_dev)
 
 
 __all__ = ["ExecutionConfig", "KAPPA_POLICIES"]

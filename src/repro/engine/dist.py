@@ -1,0 +1,573 @@
+"""Distributed spMTTKRP engine: sharded ``EngineState`` under ``shard_map``.
+
+Cluster-scope version of the paper's Observation 2 on top of the functional
+engine (:mod:`repro.engine.api`): partitions — and hence the output rows
+they own — are dealt to devices along the mesh's ``data`` axis, so the
+elementwise computation needs NO cross-device reduction; each device
+segment-sums into rows it exclusively owns. The rank dimension may
+optionally shard over ``model`` (MTTKRP is embarrassingly parallel over
+rank).
+
+The dynamic remap (Alg. 3) becomes a *static* cross-device permutation:
+which element moves from which device to which is fixed by the FLYCOO
+plans, so the exchange is precomputed host-side into an
+:class:`ExchangeSchedule` and executed as a ``collective_permute``
+round-robin — hop ``h`` sends a bounded buffer from every device ``k`` to
+device ``(k + h) % n_dev`` — instead of the baseline ``all_gather`` of the
+full element list (kept as ``DistConfig(exchange="all_gather")`` for
+comparison). AMPED (arXiv:2507.15121) and load-balanced spMTTKRP
+(arXiv:1904.03329) both identify this exchange, not the compute, as the
+multi-GPU bottleneck.
+
+Sharded layout numbering
+------------------------
+A :class:`DistState` stores the layout in *device-major* slot numbering:
+device ``k`` owns global slots ``[k * S_loc, (k+1) * S_loc)`` where
+``S_loc = max_d S_d / n_dev``, and within a device the mode-``d`` layout
+occupies the first ``S_d / n_dev`` local slots (its ``kappa_d / n_dev``
+partitions, contiguous). This requires every mode's ``kappa`` to be a
+multiple of ``n_dev`` — build tensors with
+:func:`repro.core.distributed.build_sharded_flycoo` or pick partition
+counts via :meth:`ExecutionConfig.kappa_for`.
+
+Public surface:
+
+  DistConfig                            frozen mesh-axis/exchange policy
+  shard_state(state, mesh[, dist])      EngineState -> DistState (host, once)
+  dist_mttkrp(dstate, factors)          one mode + exchange, one dispatch
+  dist_all_modes(dstate, factors)       whole rotation: ONE jitted lax.scan
+                                        inside shard_map (fold hook as in
+                                        ``engine.all_modes`` -> distributed
+                                        CPD-ALS sweeps are single programs)
+  schedule_for_plans / exchange_bytes   host-side schedule + traffic model
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding import ShardingCtx
+
+from .api import _JIT_CACHE, DISPATCH_COUNTS, TRACE_COUNTS, FoldFn
+from .backends import compute_lrow, get_backend
+from .config import ExecutionConfig
+from .state import EngineState, ModeStatic
+
+try:  # jax >= 0.6 spells it jax.shard_map
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+except ImportError:  # pragma: no cover - depends on jax version
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+
+
+EXCHANGES = ("permute", "all_gather")
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    """Static distribution policy (hashable; part of the jit cache key).
+
+    Attributes:
+      data_axis: mesh axis partitions/rows/slots shard over.
+      model_axis: optional mesh axis the factor rank dim shards over
+        (incompatible with a ``fold`` hook — grams need the full rank).
+      exchange: remap exchange strategy — ``"permute"`` runs the
+        precomputed collective_permute schedule, ``"all_gather"`` the
+        baseline full-element-list gather + scatter-slice.
+      pad_hop: per-hop buffer slot counts round up to this multiple.
+    """
+
+    data_axis: str = "data"
+    model_axis: str | None = None
+    exchange: str = "permute"
+    pad_hop: int = 8
+
+    def __post_init__(self):
+        if self.exchange not in EXCHANGES:
+            raise ValueError(
+                f"exchange {self.exchange!r} not in {EXCHANGES}")
+        if self.pad_hop < 1:
+            raise ValueError("pad_hop must be >= 1")
+
+
+# --------------------------------------------------------------------------
+# Static exchange schedule (host-side, derived from the FLYCOO plans).
+# --------------------------------------------------------------------------
+class ExchangeSchedule(NamedTuple):
+    """Per-(mode -> next mode) transition, per round-robin hop, the padded
+    slot capacity of the send buffer. ``hops[d][h-1]`` bounds how many
+    elements any device sends to its ``+h``-neighbour while remapping the
+    mode-``d`` layout into mode ``d+1``. Static truth derived from the
+    plans — the traced exchange cannot overflow it."""
+
+    n_dev: int
+    hops: tuple[tuple[int, ...], ...]
+
+    def permute_slots(self, d: int) -> int:
+        """Total send-buffer slots one device uses for transition ``d``."""
+        return sum(self.hops[d])
+
+
+def row_bytes(nmodes: int) -> int:
+    """Wire bytes per element row: val f32 + idx i32*N + alpha i32*N."""
+    return 4 * (1 + 2 * nmodes)
+
+
+def _schedule_from_slots(slots_by_mode: Sequence[np.ndarray],
+                         sizes: Sequence[int], n_dev: int,
+                         pad_hop: int) -> ExchangeSchedule:
+    """Build the schedule from each element's slot in every mode layout."""
+    n = len(slots_by_mode)
+    devs = [np.asarray(slots_by_mode[d]) // (sizes[d] // n_dev)
+            for d in range(n)]
+    hops = []
+    for d in range(n):
+        src, dst = devs[d], devs[(d + 1) % n]
+        counts = np.bincount(src * n_dev + dst,
+                             minlength=n_dev * n_dev).reshape(n_dev, n_dev)
+        per_hop = []
+        for h in range(1, n_dev):
+            cap = int(max(counts[k, (k + h) % n_dev] for k in range(n_dev)))
+            if cap:
+                cap = ((cap + pad_hop - 1) // pad_hop) * pad_hop
+            per_hop.append(cap)
+        hops.append(tuple(per_hop))
+    return ExchangeSchedule(n_dev=n_dev, hops=tuple(hops))
+
+
+def schedule_for_plans(plans, n_dev: int,
+                       pad_hop: int = 8) -> ExchangeSchedule:
+    """Exchange schedule for a tensor's ``ModePlan`` list (host-only; needs
+    no devices — used by benchmarks to model traffic at any scale)."""
+    for p in plans:
+        if p.kappa % n_dev != 0:
+            raise ValueError(
+                f"mode-{p.mode} kappa {p.kappa} not divisible by "
+                f"n_dev {n_dev}; build with kappa_for / build_sharded_flycoo")
+    return _schedule_from_slots([p.slot_of_elem for p in plans],
+                                [p.padded_nnz for p in plans], n_dev,
+                                pad_hop)
+
+
+def exchange_bytes(schedule: ExchangeSchedule, nmodes: int,
+                   slocs: Sequence[int]) -> list[dict]:
+    """Per-device wire traffic of one full rotation, per mode transition:
+    the collective_permute schedule vs the all_gather baseline. ``slocs``
+    is the per-mode local padded slot count ``S_d / n_dev`` — the baseline
+    gathers each remote device's mode-``d`` element list, so transition
+    ``d`` ships ``(n_dev - 1) * slocs[d]`` rows per device."""
+    rb = row_bytes(nmodes)
+    out = []
+    for d in range(len(schedule.hops)):
+        out.append({
+            "mode": d,
+            "permute_bytes": schedule.permute_slots(d) * rb,
+            "all_gather_bytes": (schedule.n_dev - 1) * slocs[d] * rb,
+        })
+    return out
+
+
+# --------------------------------------------------------------------------
+# DistState: the sharded EngineState.
+# --------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DistState:
+    """Immutable sharded engine state (device-major slot numbering).
+
+    Array leaves mirror :class:`~repro.engine.state.EngineState` but hold
+    *global* arrays placed over the mesh: ``val (n_dev*S_loc,)``,
+    ``idx/alpha (n_dev*S_loc, N)`` sharded along the ``data`` axis, and the
+    replicated per-mode ``relabel`` tables. ``alpha`` entries are in the
+    device-major dist numbering (see module docstring), so remap
+    destinations encode both target device and target local slot.
+    """
+
+    val: jax.Array
+    idx: jax.Array
+    alpha: jax.Array
+    relabel: tuple[jax.Array, ...]
+    mode: int
+    dims: tuple[int, ...]
+    statics: tuple[ModeStatic, ...]
+    config: ExecutionConfig
+    dist: DistConfig
+    n_dev: int
+    schedule: ExchangeSchedule
+    mesh: Mesh
+
+    # ------------------------------------------------------------ derived
+    @property
+    def nmodes(self) -> int:
+        return len(self.dims)
+
+    @property
+    def slocs(self) -> tuple[int, ...]:
+        """Per-mode local padded slot counts ``S_d / n_dev``."""
+        return tuple(s.padded_nnz // self.n_dev for s in self.statics)
+
+    @property
+    def smax_loc(self) -> int:
+        """Per-device slot count (max over per-mode local padded sizes)."""
+        return max(self.slocs)
+
+    @property
+    def imax(self) -> int:
+        return max(self.dims)
+
+    def aux_key(self):
+        return (self.mode, self.dims, self.statics, self.config, self.dist,
+                self.n_dev, self.schedule, self.mesh)
+
+    def replace(self, **kw) -> "DistState":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------- pytree
+    def tree_flatten(self):
+        children = (self.val, self.idx, self.alpha, self.relabel)
+        # aux IS the jit-cache key: one definition, no drift between what
+        # forces a retrace and what keys the _JIT_CACHE programs.
+        return children, self.aux_key()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        val, idx, alpha, relabel = children
+        mode, dims, statics, config, dist, n_dev, schedule, mesh = aux
+        return cls(val=val, idx=idx, alpha=alpha, relabel=tuple(relabel),
+                   mode=mode, dims=dims, statics=statics, config=config,
+                   dist=dist, n_dev=n_dev, schedule=schedule, mesh=mesh)
+
+
+# --------------------------------------------------------------------------
+# shard_state: place an EngineState over the mesh.
+# --------------------------------------------------------------------------
+def shard_state(state: EngineState, mesh: Mesh | ShardingCtx,
+                dist: DistConfig | None = None) -> DistState:
+    """Shard a single-device :class:`EngineState` over ``mesh``'s data axis.
+
+    ``mesh`` may be a raw :class:`jax.sharding.Mesh` or a
+    :class:`repro.sharding.ShardingCtx` — with a ctx (and no explicit
+    ``dist``) the data/model axes follow the ctx's dp/tp convention.
+
+    Renumbers every mode layout into device-major slots, precomputes the
+    collective_permute :class:`ExchangeSchedule` from the alpha tables, and
+    ``device_put``s the arrays with the matching ``NamedSharding``s.
+    Requires every mode's ``kappa`` to be a multiple of the data-axis size
+    (see :meth:`ExecutionConfig.kappa_for`).
+    """
+    if isinstance(mesh, ShardingCtx):
+        ctx, mesh = mesh, mesh.mesh
+        if dist is None:
+            dist = DistConfig(data_axis=ctx.data_axis,
+                              model_axis=ctx.tp_axis)
+    dist = dist or DistConfig()
+    if dist.data_axis not in mesh.axis_names:
+        raise ValueError(f"mesh has no axis {dist.data_axis!r}: "
+                         f"{mesh.axis_names}")
+    n_dev = mesh.shape[dist.data_axis]
+    for s in state.statics:
+        if s.kappa % n_dev != 0:
+            raise ValueError(
+                f"kappa {s.kappa} not divisible by n_dev {n_dev}; build "
+                "the tensor with ExecutionConfig.kappa_for(dim, n_dev) "
+                "(e.g. via core.distributed.build_sharded_flycoo)")
+
+    n, m0 = state.nmodes, state.mode
+    sizes = [s.padded_nnz for s in state.statics]
+    slocs = [sz // n_dev for sz in sizes]
+    smax_loc = max(slocs)
+    total = n_dev * smax_loc
+
+    alpha = np.asarray(state.alpha)
+    alive = alpha[:, m0] >= 0
+    slots = alpha[alive].astype(np.int64)           # (nnz, n) per-mode slots
+    # device-major renumbering: slot -> dev * smax_loc + (slot % S_d_loc)
+    dslots = np.empty_like(slots)
+    for d in range(n):
+        dev, loc = slots[:, d] // slocs[d], slots[:, d] % slocs[d]
+        dslots[:, d] = dev * smax_loc + loc
+    schedule = _schedule_from_slots([slots[:, d] for d in range(n)], sizes,
+                                    n_dev, dist.pad_hop)
+
+    pos = dslots[:, m0]
+    val = np.zeros(total, dtype=np.float32)
+    idx = np.zeros((total, n), dtype=np.int32)
+    nalpha = np.full((total, n), -1, dtype=np.int32)
+    val[pos] = np.asarray(state.val)[alive]
+    idx[pos] = np.asarray(state.idx)[alive]
+    nalpha[pos] = dslots.astype(np.int32)
+
+    da = dist.data_axis
+    sh1 = NamedSharding(mesh, P(da))
+    sh2 = NamedSharding(mesh, P(da, None))
+    rep = NamedSharding(mesh, P())
+    return DistState(
+        val=jax.device_put(jnp.asarray(val), sh1),
+        idx=jax.device_put(jnp.asarray(idx), sh2),
+        alpha=jax.device_put(jnp.asarray(nalpha), sh2),
+        relabel=tuple(jax.device_put(r, rep) for r in state.relabel),
+        mode=m0, dims=state.dims, statics=state.statics,
+        config=state.config, dist=dist, n_dev=n_dev, schedule=schedule,
+        mesh=mesh)
+
+
+# --------------------------------------------------------------------------
+# Per-device exchange kernels (run inside shard_map).
+# --------------------------------------------------------------------------
+def _exchange_permute(v, ix, al, alive, *, nxt, hops, smax_loc, n_dev, da,
+                      nmodes):
+    """Static round-robin: hop ``h`` ships a bounded buffer to the ``+h``
+    neighbour via collective_permute; local moves scatter directly."""
+    me = lax.axis_index(da)
+    dstg = al[:, nxt]                       # global dist slot (-1 dead)
+    dst_dev = dstg // smax_loc              # floor div: dead -> -1
+    mine = alive & (dst_dev == me)
+    dst = jnp.where(mine, dstg % smax_loc, smax_loc)
+    nval = jnp.zeros((smax_loc,), v.dtype).at[dst].set(
+        v, mode="drop", unique_indices=True)
+    nidx = jnp.zeros((smax_loc, nmodes), ix.dtype).at[dst].set(
+        ix, mode="drop", unique_indices=True)
+    nalpha = jnp.full((smax_loc, nmodes), -1, jnp.int32).at[dst].set(
+        al, mode="drop", unique_indices=True)
+
+    for h in range(1, n_dev):
+        cap = hops[h - 1]
+        if cap == 0:    # statically empty hop: no collective at all
+            continue
+        sel = alive & (dst_dev == (me + h) % n_dev)
+        # pack outgoing elements densely; schedule guarantees fit <= cap
+        bpos = jnp.where(sel, jnp.cumsum(sel) - 1, cap)
+        bval = jnp.zeros((cap,), v.dtype).at[bpos].set(v, mode="drop")
+        bidx = jnp.zeros((cap, nmodes), ix.dtype).at[bpos].set(
+            ix, mode="drop")
+        balpha = jnp.full((cap, nmodes), -1, jnp.int32).at[bpos].set(
+            al, mode="drop")
+        perm = [(k, (k + h) % n_dev) for k in range(n_dev)]
+        rval = lax.ppermute(bval, da, perm)
+        ridx = lax.ppermute(bidx, da, perm)
+        ralpha = lax.ppermute(balpha, da, perm)
+        rdst = ralpha[:, nxt]               # arrivals all target me
+        rloc = jnp.where(rdst >= 0, rdst % smax_loc, smax_loc)
+        nval = nval.at[rloc].set(rval, mode="drop", unique_indices=True)
+        nidx = nidx.at[rloc].set(ridx, mode="drop", unique_indices=True)
+        nalpha = nalpha.at[rloc].set(ralpha, mode="drop",
+                                     unique_indices=True)
+    return nval, nidx, nalpha
+
+
+def _exchange_all_gather(v, ix, al, alive, *, d, nxt, smax_loc, n_dev, da,
+                         nmodes):
+    """Baseline (pre-engine ``DistributedMTTKRP``): gather the FULL element
+    list on every device, scatter into the whole next layout, keep the
+    local slice. O(n_dev * nnz) wire traffic per transition."""
+    del alive
+    total = n_dev * smax_loc
+    vg = lax.all_gather(v, da, tiled=True)
+    ig = lax.all_gather(ix, da, tiled=True)
+    ag = lax.all_gather(al, da, tiled=True)
+    alive_g = ag[:, d] >= 0
+    dst = jnp.where(alive_g, ag[:, nxt], total)
+    nval = jnp.zeros((total,), v.dtype).at[dst].set(
+        vg, mode="drop", unique_indices=True)
+    nidx = jnp.zeros((total, nmodes), ix.dtype).at[dst].set(
+        ig, mode="drop", unique_indices=True)
+    nalpha = jnp.full((total, nmodes), -1, jnp.int32).at[dst].set(
+        ag, mode="drop", unique_indices=True)
+    me = lax.axis_index(da)
+    sl = lambda a: lax.dynamic_slice_in_dim(  # noqa: E731
+        a, me * smax_loc, smax_loc, axis=0)
+    return sl(nval), sl(nidx), sl(nalpha)
+
+
+# --------------------------------------------------------------------------
+# One mode on one device: local EC + output gather + remap exchange.
+# --------------------------------------------------------------------------
+def _dist_mode_branch(d: int, *, statics: Sequence[ModeStatic], n_dev: int,
+                      smax_loc: int, schedule: ExchangeSchedule,
+                      config: ExecutionConfig, dist: DistConfig,
+                      fold: FoldFn | None, pad_out_to: int | None):
+    """Traced per-device step for (static) mode ``d``; same contract as the
+    single-device ``engine.api._mode_branch`` but over local shards."""
+    s = statics[d]
+    n = len(statics)
+    nxt = (d + 1) % n
+    sloc = s.padded_nnz // n_dev
+    lplan = ModeStatic(kappa=s.kappa // n_dev, rows_pp=s.rows_pp,
+                       blocks_pp=s.blocks_pp, block_p=s.block_p, dim=s.dim)
+    backend = get_backend(config)
+    da = dist.data_axis
+
+    def step(layout3, relabels, factors, carry):
+        val, idx, alpha = layout3           # local (smax_loc, ...) shards
+        v, ix, al = val[:sloc], idx[:sloc], alpha[:sloc]
+        alive = al[:, d] >= 0
+        # EC over owned partitions only (Obs. 2: rows owned exclusively,
+        # so the segment-sum needs no cross-device reduction).
+        lrow = compute_lrow(ix[:, d], relabels[d], s.rows_pp, alive)
+        out_rel_loc = backend({"val": v, "idx": ix, "lrow": lrow},
+                              tuple(factors), d, plan=lplan, config=config)
+        # Devices own contiguous relabeled-row ranges (kappa % n_dev == 0),
+        # so a tiled output gather IS the global relabeled result. This is
+        # rows x R — small — not the element list.
+        out_rel = lax.all_gather(out_rel_loc, da, tiled=True)
+        out = jnp.take(out_rel, relabels[d], axis=0)
+        if fold is not None:
+            factors, carry = fold(d, out, factors, carry)
+        if pad_out_to is not None:
+            out = jnp.pad(out, ((0, pad_out_to - s.dim), (0, 0)))
+
+        if dist.exchange == "permute":
+            nl = _exchange_permute(v, ix, al, alive, nxt=nxt,
+                                   hops=schedule.hops[d],
+                                   smax_loc=smax_loc, n_dev=n_dev, da=da,
+                                   nmodes=n)
+        else:
+            nl = _exchange_all_gather(v, ix, al, alive, d=d, nxt=nxt,
+                                      smax_loc=smax_loc, n_dev=n_dev,
+                                      da=da, nmodes=n)
+        return nl, out, factors, carry
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# Program builders (shard_map-wrapped; pre-jit for lowering inspection).
+# --------------------------------------------------------------------------
+def _specs(dstate: DistState, fold: FoldFn | None):
+    da, ma = dstate.dist.data_axis, dstate.dist.model_axis
+    if fold is not None and ma is not None:
+        raise ValueError("fold needs the full rank on every device; use "
+                         "model_axis=None when folding (e.g. CPD-ALS)")
+    layout_specs = (P(da), P(da, None), P(da, None))
+    fac_spec = P(None, ma) if ma else P(None, None)
+    in_specs = (layout_specs, P(), fac_spec, P())
+    return layout_specs, fac_spec, in_specs
+
+
+def _build_dist_scan(dstate: DistState, fold: FoldFn | None):
+    """The whole mode rotation as one ``lax.scan`` on every device, wrapped
+    in shard_map. Captures only static aux, never the caller's arrays."""
+    n, m0, imax = dstate.nmodes, dstate.mode, dstate.imax
+    dims, smax_loc = dstate.dims, dstate.smax_loc
+    seq = tuple((m0 + i) % n for i in range(n))
+    branches = [
+        _dist_mode_branch(d, statics=dstate.statics, n_dev=dstate.n_dev,
+                          smax_loc=smax_loc, schedule=dstate.schedule,
+                          config=dstate.config, dist=dstate.dist,
+                          fold=fold, pad_out_to=imax)
+        for d in range(n)
+    ]
+    layout_specs, fac_spec, in_specs = _specs(dstate, fold)
+
+    def local_run(layout3, relabels, factors, carry):
+        TRACE_COUNTS["dist_all_modes"] += 1  # trace-time side effect
+
+        def body(sc, mode_t):
+            layout3, factors, carry = sc
+            nl, out, factors, carry = lax.switch(
+                mode_t,
+                [lambda l3, f, c, b=b: b(l3, relabels, f, c)
+                 for b in branches],
+                layout3, factors, carry)
+            return (nl, factors, carry), out
+
+        (layout3, factors, carry), outs = lax.scan(
+            body, (layout3, factors, carry),
+            jnp.asarray(seq, dtype=jnp.int32))
+        by_mode = tuple(outs[seq.index(d)][: dims[d]] for d in range(n))
+        return layout3, by_mode, factors, carry
+
+    out_specs = (layout_specs, fac_spec, fac_spec, P())
+    return shard_map(local_run, dstate.mesh, in_specs, out_specs)
+
+
+def _build_dist_step(dstate: DistState):
+    """Single-mode program: EC + exchange for the resident mode only."""
+    d = dstate.mode
+    step = _dist_mode_branch(d, statics=dstate.statics, n_dev=dstate.n_dev,
+                             smax_loc=dstate.smax_loc,
+                             schedule=dstate.schedule, config=dstate.config,
+                             dist=dstate.dist, fold=None, pad_out_to=None)
+    layout_specs, fac_spec, in_specs = _specs(dstate, None)
+
+    def local_run(layout3, relabels, factors, carry):
+        TRACE_COUNTS["dist_mttkrp"] += 1  # trace-time side effect
+        nl, out, _, _ = step(layout3, relabels, factors, carry)
+        return nl, out
+
+    return shard_map(local_run, dstate.mesh, in_specs,
+                     (layout_specs, fac_spec))
+
+
+# --------------------------------------------------------------------------
+# Public execution API.
+# --------------------------------------------------------------------------
+def dist_mttkrp(dstate: DistState, factors: Sequence[jax.Array]):
+    """MTTKRP for the resident mode + cross-device remap exchange; returns
+    ``(out, next_dstate)`` with ``out`` of shape ``(dims[mode], R)``."""
+    key = ("dist_mttkrp", dstate.aux_key())
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        donate = (0,) if dstate.config.resolve_donate() else ()
+        fn = _JIT_CACHE[key] = jax.jit(_build_dist_step(dstate),
+                                       donate_argnums=donate)
+    DISPATCH_COUNTS["dist_mttkrp"] += 1
+    (nval, nidx, nalpha), out = fn(
+        (dstate.val, dstate.idx, dstate.alpha), dstate.relabel,
+        tuple(factors), None)
+    nxt = (dstate.mode + 1) % dstate.nmodes
+    return out, dstate.replace(val=nval, idx=nidx, alpha=nalpha, mode=nxt)
+
+
+def dist_all_modes(dstate: DistState, factors: Sequence[jax.Array], *,
+                   fold: FoldFn | None = None, carry=None):
+    """Distributed spMTTKRP along all modes: ONE jitted ``lax.scan`` under
+    ``shard_map``, starting from any resident mode, with the sharded layout
+    as (donation-ready) carry. Same contract as ``engine.all_modes``:
+    without ``fold`` returns ``(outs, next_dstate)``; with ``fold`` (a
+    stable module-level callable) returns
+    ``(outs, next_dstate, factors, carry)`` — which is how distributed
+    CPD-ALS sweeps stay single traced programs."""
+    key = ("dist_all_modes", dstate.aux_key(), fold)
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        donate = (0,) if dstate.config.resolve_donate() else ()
+        fn = _JIT_CACHE[key] = jax.jit(_build_dist_scan(dstate, fold),
+                                       donate_argnums=donate)
+    DISPATCH_COUNTS["dist_all_modes"] += 1
+    layout3, outs, out_factors, out_carry = fn(
+        (dstate.val, dstate.idx, dstate.alpha), dstate.relabel,
+        tuple(factors), carry)
+    nval, nidx, nalpha = layout3
+    next_state = dstate.replace(val=nval, idx=nidx, alpha=nalpha)
+    if fold is None:
+        return list(outs), next_state
+    return list(outs), next_state, list(out_factors), out_carry
+
+
+def lowered_text(dstate: DistState, factors: Sequence[jax.Array], *,
+                 fold: FoldFn | None = None, carry=None) -> str:
+    """StableHLO of the dist_all_modes program (acceptance: the permute
+    exchange lowers to collective_permute with no element-list all_gather)."""
+    fn = _build_dist_scan(dstate, fold)
+    return jax.jit(fn).lower(
+        (dstate.val, dstate.idx, dstate.alpha), dstate.relabel,
+        tuple(factors), carry).as_text()
+
+
+__all__ = ["DistConfig", "DistState", "ExchangeSchedule", "shard_state",
+           "dist_mttkrp", "dist_all_modes", "schedule_for_plans",
+           "exchange_bytes", "row_bytes", "lowered_text", "EXCHANGES"]

@@ -26,6 +26,12 @@ class ShardingCtx:
     tp_axis: Optional[str]        # "model"
     fsdp: bool = True             # shard params/opt-state over dp too
 
+    @property
+    def data_axis(self) -> str:
+        """Innermost dp axis name — the axis engine.dist shards slots and
+        partitions over (``"data"`` when the mesh has no dp axis)."""
+        return self.dp_axes[-1] if self.dp_axes else "data"
+
     def resolve(self, *tags) -> P:
         spec = []
         for t in tags:

@@ -31,7 +31,12 @@ def run_sub(body: str, devices: int = 8, timeout: int = 900) -> str:
 
 
 def test_distributed_mttkrp_matches_oracle():
+    """Deprecated shim: oracle parity on a (data=4, model=2) mesh, plus the
+    regressions of the shim rework — ``all_modes`` from a mid-rotation
+    mode (the old class hard-asserted ``current_mode == 0``) and
+    ``reset()`` for parity with the ``MTTKRPExecutor`` shim."""
     out = run_sub("""
+        import warnings
         from repro.core.distributed import (DistributedMTTKRP,
                                             build_sharded_flycoo)
         from repro.core import init_factors, mttkrp_ref
@@ -47,17 +52,240 @@ def test_distributed_mttkrp_matches_oracle():
         t = build_sharded_flycoo(idx, val, dims, n_dev=4, rows_pp=8,
                                  block_p=8)
         factors = init_factors(jax.random.PRNGKey(1), dims, 8)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            try:
+                DistributedMTTKRP(t, mesh)
+            except DeprecationWarning:
+                pass
+            else:
+                raise AssertionError("shim must warn DeprecationWarning")
         exe = DistributedMTTKRP(t, mesh, model_axis="model")
+        refs = [mttkrp_ref(jnp.asarray(idx), jnp.asarray(val), factors, d,
+                           dims[d]) for d in range(3)]
         for sweep in range(2):
             outs = exe.all_modes(factors)
             for d in range(3):
-                ref = mttkrp_ref(jnp.asarray(idx), jnp.asarray(val),
-                                 factors, d, dims[d])
-                np.testing.assert_allclose(np.asarray(outs[d]), ref,
+                np.testing.assert_allclose(np.asarray(outs[d]), refs[d],
                                            rtol=2e-4, atol=2e-4)
+        # step to mode 1, run all_modes mid-rotation (was an assert), reset
+        np.testing.assert_allclose(np.asarray(exe.step(factors)), refs[0],
+                                   rtol=2e-4, atol=2e-4)
+        assert exe.current_mode == 1
+        outs = exe.all_modes(factors)
+        assert exe.current_mode == 1
+        for d in range(3):
+            np.testing.assert_allclose(np.asarray(outs[d]), refs[d],
+                                       rtol=2e-4, atol=2e-4)
+        exe.reset()
+        assert exe.current_mode == 0
+        np.testing.assert_allclose(np.asarray(exe.step(factors)), refs[0],
+                                   rtol=2e-4, atol=2e-4)
         print("DIST_MTTKRP_OK")
     """)
     assert "DIST_MTTKRP_OK" in out
+
+
+def test_engine_dist_matches_single_device():
+    """engine.dist parity: nmodes 3-5 on 2 and 4 fake devices, against both
+    the single-device engine and the COO oracle, across two sweeps."""
+    out = run_sub("""
+        from repro import engine
+        from repro.core import init_factors, mttkrp_ref
+        from repro.core.distributed import build_sharded_flycoo
+        from repro.launch.mesh import make_mesh
+
+        rng = np.random.default_rng(0)
+        for nmodes, dims in ((3, (24, 18, 12)), (4, (12, 10, 8, 6)),
+                             (5, (9, 8, 7, 6, 5))):
+            idx = np.unique(np.stack(
+                [rng.integers(0, d, 700) for d in dims], 1).astype(np.int32),
+                axis=0)
+            val = rng.standard_normal(idx.shape[0]).astype(np.float32)
+            factors = tuple(init_factors(jax.random.PRNGKey(1), dims, 8))
+            t = build_sharded_flycoo(idx, val, dims, n_dev=4, rows_pp=4,
+                                     block_p=8)
+            state = engine.init(t)
+            outs_1d, _ = engine.all_modes(state, factors)
+            refs = [mttkrp_ref(jnp.asarray(idx), jnp.asarray(val), factors,
+                               d, dims[d]) for d in range(nmodes)]
+            for n_dev in (2, 4):
+                mesh = make_mesh((n_dev,), ("data",))
+                ds = engine.dist.shard_state(state, mesh)
+                for sweep in range(2):
+                    outs, ds = engine.dist.dist_all_modes(ds, factors)
+                    for d in range(nmodes):
+                        np.testing.assert_allclose(
+                            np.asarray(outs[d]), np.asarray(outs_1d[d]),
+                            rtol=1e-5, atol=1e-5)
+                        np.testing.assert_allclose(
+                            np.asarray(outs[d]), refs[d], rtol=2e-4,
+                            atol=2e-4)
+                # single-mode stepping matches too
+                out, ds = engine.dist.dist_mttkrp(ds, factors)
+                np.testing.assert_allclose(np.asarray(out), refs[0],
+                                           rtol=2e-4, atol=2e-4)
+                assert ds.mode == 1
+        print("ENGINE_DIST_OK")
+    """)
+    assert "ENGINE_DIST_OK" in out
+
+
+def test_permute_schedule_matches_all_gather_baseline():
+    """The collective_permute schedule and the all_gather baseline must
+    produce bitwise-identical next layouts and outputs, the scanned
+    program must compile ONCE per config, and the lowered permute program
+    must contain collective_permute with no element-list all_gather."""
+    out = run_sub("""
+        from repro import engine
+        from repro.core import init_factors
+        from repro.core.distributed import build_sharded_flycoo
+        from repro.engine.dist import DistConfig, lowered_text
+        from repro.launch.mesh import make_mesh
+
+        rng = np.random.default_rng(3)
+        dims = (24, 18, 12)
+        idx = np.unique(np.stack(
+            [rng.integers(0, d, 900) for d in dims], 1).astype(np.int32),
+            axis=0)
+        val = rng.standard_normal(idx.shape[0]).astype(np.float32)
+        factors = tuple(init_factors(jax.random.PRNGKey(1), dims, 8))
+        t = build_sharded_flycoo(idx, val, dims, n_dev=4, rows_pp=4,
+                                 block_p=8)
+        state = engine.init(t)
+        mesh = make_mesh((4,), ("data",))
+
+        # ---- bitwise: permute vs all_gather layouts + outputs ----
+        ds_p = engine.dist.shard_state(state, mesh,
+                                       DistConfig(exchange="permute"))
+        ds_a = engine.dist.shard_state(state, mesh,
+                                       DistConfig(exchange="all_gather"))
+        np.testing.assert_array_equal(np.asarray(ds_p.alpha),
+                                      np.asarray(ds_a.alpha))
+        for sweep in range(2):
+            outs_p, ds_p = engine.dist.dist_all_modes(ds_p, factors)
+            outs_a, ds_a = engine.dist.dist_all_modes(ds_a, factors)
+            for a, b in zip(outs_p, outs_a):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            np.testing.assert_array_equal(np.asarray(ds_p.val),
+                                          np.asarray(ds_a.val))
+            np.testing.assert_array_equal(np.asarray(ds_p.idx),
+                                          np.asarray(ds_a.idx))
+            np.testing.assert_array_equal(np.asarray(ds_p.alpha),
+                                          np.asarray(ds_a.alpha))
+
+        # ---- one compile per distributed sweep config ----
+        engine.reset_counters()
+        # distinct pad_hop -> distinct jit cache entry: counts start fresh
+        ds = engine.dist.shard_state(state, mesh, DistConfig(pad_hop=16))
+        for _ in range(3):
+            outs, ds = engine.dist.dist_all_modes(ds, factors)
+        assert engine.TRACE_COUNTS["dist_all_modes"] == 1, \
+            dict(engine.TRACE_COUNTS)
+        assert engine.DISPATCH_COUNTS["dist_all_modes"] == 3, \
+            dict(engine.DISPATCH_COUNTS)
+
+        # ---- lowering: collective_permute, no element-list all_gather ----
+        ds = engine.dist.shard_state(state, mesh)
+        txt = lowered_text(ds, factors)
+        assert "collective_permute" in txt
+        sloc = ds.smax_loc
+        for line in txt.splitlines():
+            if "all_gather" in line:   # only the rows-x-R output gather
+                assert f"tensor<{sloc}x" not in line, line
+        txt_a = lowered_text(engine.dist.shard_state(
+            state, mesh, DistConfig(exchange="all_gather")), factors)
+        assert "collective_permute" not in txt_a
+        assert any(f"tensor<{sloc}x" in line
+                   for line in txt_a.splitlines() if "all_gather" in line)
+        print("EXCHANGE_OK")
+    """)
+    assert "EXCHANGE_OK" in out
+
+
+def test_dist_cp_als_single_traced_sweeps():
+    """cp_als(mesh=...) runs distributed ALS sweeps through the dist fold
+    hook and matches the single-device result; the whole run compiles the
+    distributed sweep exactly once."""
+    out = run_sub("""
+        from repro import engine
+        from repro.core import cp_als
+        from repro.core.distributed import build_sharded_flycoo
+        from repro.launch.mesh import make_mesh
+
+        rng = np.random.default_rng(7)
+        dims = (24, 18, 12)
+        idx = np.unique(np.stack(
+            [rng.integers(0, d, 900) for d in dims], 1).astype(np.int32),
+            axis=0)
+        val = rng.standard_normal(idx.shape[0]).astype(np.float32)
+        t = build_sharded_flycoo(idx, val, dims, n_dev=4, rows_pp=4,
+                                 block_p=8)
+        mesh = make_mesh((4,), ("data",))
+        engine.reset_counters()
+        res_d = cp_als(t, rank=6, iters=4, mesh=mesh)
+        assert engine.TRACE_COUNTS["dist_all_modes"] == 1
+        assert engine.DISPATCH_COUNTS["dist_all_modes"] == 4
+        res_s = cp_als(t, rank=6, iters=4)
+        np.testing.assert_allclose(res_d.fits, res_s.fits, atol=2e-3)
+        for a, b in zip(res_d.factors, res_s.factors):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-3, atol=2e-3)
+        print("DIST_CPD_OK")
+    """)
+    assert "DIST_CPD_OK" in out
+
+
+def test_exchange_schedule_is_static_upper_bound():
+    """Host-only (no mesh): the precomputed schedule's per-hop capacities
+    bound the true cross-device move counts from the FLYCOO plans, are
+    padded to the requested multiple, and feed the traffic model."""
+    import numpy as np
+
+    from repro.core.distributed import build_sharded_flycoo
+    from repro.engine.dist import (exchange_bytes, row_bytes,
+                                   schedule_for_plans)
+
+    rng = np.random.default_rng(2)
+    dims = (40, 30, 20)
+    idx = np.unique(np.stack(
+        [rng.integers(0, d, 1200) for d in dims], 1).astype(np.int32),
+        axis=0)
+    val = rng.standard_normal(idx.shape[0]).astype(np.float32)
+    t = build_sharded_flycoo(idx, val, dims, n_dev=4, rows_pp=8, block_p=8)
+    for p in t.plans:
+        assert p.kappa % 4 == 0
+    n = len(dims)
+    for n_dev, pad in ((2, 8), (4, 4)):
+        sched = schedule_for_plans(t.plans, n_dev, pad_hop=pad)
+        assert sched.n_dev == n_dev
+        assert len(sched.hops) == n
+        for d in range(n):
+            src = t.plans[d].slot_of_elem // \
+                (t.plans[d].padded_nnz // n_dev)
+            nxt = (d + 1) % n
+            dst = t.plans[nxt].slot_of_elem // \
+                (t.plans[nxt].padded_nnz // n_dev)
+            assert len(sched.hops[d]) == n_dev - 1
+            for h in range(1, n_dev):
+                cap = sched.hops[d][h - 1]
+                assert cap % pad == 0 or cap == 0
+                for k in range(n_dev):
+                    moved = int(np.sum((src == k)
+                                       & (dst == (k + h) % n_dev)))
+                    assert moved <= cap, (d, h, k, moved, cap)
+        slocs = [p.padded_nnz // n_dev for p in t.plans]
+        rows = exchange_bytes(sched, n, slocs)
+        for d, r in enumerate(rows):
+            assert r["permute_bytes"] == \
+                sched.permute_slots(d) * row_bytes(n)
+            # the baseline gathers each remote device's mode-d list
+            assert r["all_gather_bytes"] == \
+                (n_dev - 1) * slocs[d] * row_bytes(n)
+            # the whole point: the schedule ships (far) fewer bytes
+            assert r["permute_bytes"] <= r["all_gather_bytes"]
+    with pytest.raises(ValueError, match="not divisible"):
+        schedule_for_plans(t.plans, 3)
 
 
 def test_sharded_train_step_matches_single_device():

@@ -148,6 +148,26 @@ def test_execution_config_static_and_validated():
         engine.get_backend("cuda")
 
 
+def test_kappa_for_rounds_to_device_multiples():
+    """One kappa policy for single- and multi-device plans: divisible by
+    n_dev, never exceeding the row count, honoring fixed/vmem policies."""
+    cfg = ExecutionConfig(rows_pp=8)
+    from repro.core.partition import choose_kappa
+    assert cfg.kappa_for(40) == choose_kappa(40, 8)
+    for dim in (40, 30, 20, 9):
+        for n_dev in (2, 4):
+            k = cfg.kappa_for(dim, n_dev)
+            assert k % n_dev == 0
+            assert n_dev <= k <= dim
+    # fixed policy: round the explicit kappa up to the device multiple
+    fixed = ExecutionConfig(kappa_policy="fixed", kappa=3)
+    assert fixed.kappa_for(100) == 3
+    assert fixed.kappa_for(100, 4) == 4
+    assert fixed.kappa_for(100, 2) == 4
+    with pytest.raises(ValueError, match="fewer rows than devices"):
+        ExecutionConfig().kappa_for(3, 4)
+
+
 def test_init_from_raw_coo_uses_config_policy():
     dims = (19, 13, 7)
     rng = np.random.default_rng(5)
