@@ -16,10 +16,16 @@ import numpy as np
 
 from repro.core import datasets
 
-BENCH_DATASETS = ("amazon", "delicious", "music", "nell1", "twitch", "vast")
-BENCH_SCALE = 3e-4
-BENCH_MAX_NNZ = 60_000
-RANK = 32  # paper default R
+# Workload knobs, overridable from the environment so CI can run the same
+# figure scripts as a bounded smoke (tiny synthetic tensors, few timing
+# iterations) without forking the code paths.
+BENCH_DATASETS = tuple(
+    os.environ.get("BENCH_DATASETS",
+                   "amazon,delicious,music,nell1,twitch,vast").split(","))
+BENCH_SCALE = float(os.environ.get("BENCH_SCALE", 3e-4))
+BENCH_MAX_NNZ = int(os.environ.get("BENCH_MAX_NNZ", 60_000))
+BENCH_ITERS = int(os.environ.get("BENCH_ITERS", 5))
+RANK = int(os.environ.get("BENCH_RANK", 32))  # paper default R
 
 _JSON_PATH = os.environ.get(
     "BENCH_JSON",
@@ -31,8 +37,9 @@ def load_bench_tensor(name: str, **kw):
                          seed=0, **kw)
 
 
-def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+def time_fn(fn, *args, iters: int | None = None, warmup: int = 2) -> float:
     """Median wall time (seconds) of a device-blocking call."""
+    iters = BENCH_ITERS if iters is None else iters
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []

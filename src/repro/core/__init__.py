@@ -5,8 +5,9 @@ Engine API
 The spMTTKRP execution engine is functional (:mod:`repro.engine`): a
 pytree ``EngineState`` (layout arrays + relabel tables + static mode
 plans) threaded through pure functions, with execution policy in a frozen
-``ExecutionConfig`` (backend registry ``xla | pallas | ref``, interpret,
-block_p, kappa policy, precision, donation):
+``ExecutionConfig`` (backend registry ``xla | pallas | pallas_fused |
+ref``, interpret, block_p, kappa policy, VMEM budget, precision, donation,
+remap fusion):
 
     from repro import engine
     from repro.engine import ExecutionConfig
@@ -18,6 +19,13 @@ block_p, kappa policy, precision, donation):
 ``engine.all_modes`` runs the whole mode rotation (paper Alg. 5) as a
 single jitted ``lax.scan`` with donated layout buffers — the T_in/T_out
 swap without host round-trips — and works from any resident mode.
+
+``backend="pallas_fused"`` selects the zero-HBM-intermediate Pallas
+pipeline: factor rows are gathered *inside* the kernel grid (no
+``(S, N-1, R)`` HBM intermediate) and the Alg. 3 remap scatter is emitted
+by the same kernel pass (``ExecutionConfig(fuse_remap=False)`` restores
+the XLA scatter path for comparison). ``backend="pallas"`` remains the
+unfused-gather baseline the paper's fusion argument is measured against.
 
 Multi-device execution lives in :mod:`repro.engine.dist`: ``shard_state``
 places an ``EngineState`` over a mesh's ``data`` axis and

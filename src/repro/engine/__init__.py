@@ -10,7 +10,13 @@ Public surface:
                                       jitted lax.scan over the mode rotation
   BACKENDS / register_backend / get_backend
                                    elementwise-computation backend registry
-                                   (replaces string-typed ``backend=`` kwargs)
+                                   (``xla`` | ``pallas`` | ``pallas_fused``
+                                   | ``ref``; replaces string-typed
+                                   ``backend=`` kwargs). ``pallas_fused`` is
+                                   the zero-HBM-intermediate pipeline: the
+                                   factor gather runs inside the kernel grid
+                                   and the Alg. 3 remap scatter is fused
+                                   into the same pass (``fuse_remap`` knob)
   dist (DistConfig / shard_state / dist_mttkrp / dist_all_modes)
                                    multi-device subsystem: EngineState sharded
                                    under shard_map, remap exchanged via a
@@ -23,7 +29,8 @@ Migration from the deprecated stateful executor:
   exe.all_modes(factors)           -> outs, s = engine.all_modes(s, factors)
   exe.layout / exe.current_mode    -> s.val / s.idx / s.alpha / s.mode
 """
-from .config import ExecutionConfig, KAPPA_POLICIES
+from .config import (ExecutionConfig, KAPPA_POLICIES,
+                     platform_default_interpret)
 from .state import EngineState, ModeStatic, mode_static_from_plan
 from .backends import (BACKENDS, register_backend, get_backend,
                        compute_lrow)
@@ -34,7 +41,8 @@ from .dist import (DistConfig, DistState, ExchangeSchedule, shard_state,
                    dist_mttkrp, dist_all_modes)
 
 __all__ = [
-    "ExecutionConfig", "KAPPA_POLICIES", "EngineState", "ModeStatic",
+    "ExecutionConfig", "KAPPA_POLICIES", "platform_default_interpret",
+    "EngineState", "ModeStatic",
     "mode_static_from_plan", "BACKENDS", "register_backend", "get_backend",
     "compute_lrow", "init", "mttkrp", "all_modes", "scan_jaxpr",
     "reset_counters", "TRACE_COUNTS", "DISPATCH_COUNTS", "FoldFn",

@@ -104,7 +104,8 @@ def _as_flycoo(tensor, config: ExecutionConfig):
     indices, values, dims = tensor
     kappa = config.kappa if config.kappa_policy == "fixed" else None
     return build_flycoo(indices, values, dims, kappa=kappa,
-                        rows_pp=config.rows_pp, block_p=config.block_p)
+                        rows_pp=config.resolve_rows_pp(),
+                        block_p=config.block_p)
 
 
 # --------------------------------------------------------------------------
@@ -126,29 +127,43 @@ def _mode_branch(d: int, *, statics: Sequence[ModeStatic], smax: int,
     nxt = (d + 1) % n
     sd = plan.padded_nnz
     backend = get_backend(config)
+    # Fusing backends (e.g. ``pallas_fused``) emit the Alg. 3 remap scatter
+    # inside the EC kernel pass; ``config.fuse_remap=False`` keeps the XLA
+    # scatter path as the comparison baseline.
+    fused = (getattr(backend, "fused_remap", None)
+             if config.fuse_remap else None)
 
     def step(layout3, relabels, factors, carry):
         val, idx, alpha = layout3
         v, ix, al = val[:sd], idx[:sd], alpha[:sd]
         alive = al[:, d] >= 0
         lrow = compute_lrow(ix[:, d], relabels[d], plan.rows_pp, alive)
-        out_rel = backend({"val": v, "idx": ix, "lrow": lrow},
-                          tuple(factors), d, plan=plan, config=config)
+        layout = {"val": v, "idx": ix, "alpha": al, "lrow": lrow}
+        if fused is not None:
+            # One Pallas pass: EC + remap; slots beyond S_{d+1} stay empty
+            # (the kernel initializes the next layout to the pad pattern).
+            out_rel, (nval, nidx, nalpha) = fused(
+                layout, tuple(factors), d, plan=plan, config=config,
+                smax=smax, next_mode=nxt)
+            nval = nval.astype(val.dtype)
+            nidx = nidx.astype(idx.dtype)
+        else:
+            out_rel = backend(layout, tuple(factors), d, plan=plan,
+                              config=config)
+            # Alg. 3: conflict-free scatter into the mode-(d+1) layout (pads
+            # parked at S_max -> dropped); slots beyond S_{d+1} stay empty.
+            dst = jnp.where(alive, al[:, nxt], smax)
+            nval = jnp.zeros((smax,), val.dtype).at[dst].set(
+                v, mode="drop", unique_indices=True)
+            nidx = jnp.zeros((smax, n), idx.dtype).at[dst].set(
+                ix, mode="drop", unique_indices=True)
+            nalpha = jnp.full((smax, n), -1, jnp.int32).at[dst].set(
+                al, mode="drop", unique_indices=True)
         out = jnp.take(out_rel, relabels[d], axis=0)  # un-relabel -> (I_d, R)
         if fold is not None:
             factors, carry = fold(d, out, factors, carry)
         if pad_out_to is not None:
             out = jnp.pad(out, ((0, pad_out_to - plan.dim), (0, 0)))
-
-        # Alg. 3: conflict-free scatter into the mode-(d+1) layout (pads
-        # parked at S_max -> dropped); slots beyond S_{d+1} stay empty.
-        dst = jnp.where(alive, al[:, nxt], smax)
-        nval = jnp.zeros((smax,), val.dtype).at[dst].set(
-            v, mode="drop", unique_indices=True)
-        nidx = jnp.zeros((smax, n), idx.dtype).at[dst].set(
-            ix, mode="drop", unique_indices=True)
-        nalpha = jnp.full((smax, n), -1, jnp.int32).at[dst].set(
-            al, mode="drop", unique_indices=True)
         return (nval, nidx, nalpha), out, factors, carry
 
     return step

@@ -8,15 +8,37 @@ backend implements the same contract,
         -> out_rel  (plan.relabeled_rows, R) f32
 
 where ``layout`` holds the mode-``mode`` kernel layout slices
-(``val (S_d,)``, ``idx (S_d, N)``, ``lrow (S_d,)``) and the result lives in
-relabeled row space (caller un-relabels with the mode's relabel table).
+(``val (S_d,)``, ``idx (S_d, N)``, ``lrow (S_d,)``, and — when the caller
+has it resident, as the engine scan does — ``alpha (S_d, N)``) and the
+result lives in relabeled row space (caller un-relabels with the mode's
+relabel table). The same contract serves the single-device scan
+(``engine.api``) and the per-device shards under ``shard_map``
+(``engine.dist``).
+
+A backend may additionally expose a ``fused_remap`` attribute,
+
+    fused_remap(layout, factors, mode, plan=, config=, smax=, next_mode=)
+        -> (out_rel, (nval (smax,), nidx (smax, N), nalpha (smax, N)))
+
+which performs EC *and* the Alg. 3 remap scatter in one kernel pass; the
+engine's scan step delegates to it (unless ``config.fuse_remap`` is off)
+instead of issuing three separate full-``S_max`` XLA scatters.
 
 Registered backends:
-  xla     fused segment-sum over the relabeled row space (default)
-  pallas  the fused one-hot-MXU Pallas kernel (interpret off-TPU)
-  ref     unfused oracle-shaped path: materialize the (S, R) Hadamard
-          partials, then segment-sum — the baseline the paper's fusion
-          argument (Fig. 7) is measured against
+  ============  =========================================================
+  xla           fused segment-sum over the relabeled row space (default)
+  pallas        one-hot-MXU Pallas kernel fed by an XLA-materialized
+                ``(S, N-1, R)`` HBM gather — the fusion comparison
+                baseline (interpret off-TPU)
+  pallas_fused  zero-HBM-intermediate Pallas pipeline: factor rows are
+                gathered *inside* the kernel grid (scalar-prefetched
+                indices + double-buffered ANY->VMEM row DMA) and the
+                Alg. 3 remap scatter is emitted by the same pass via
+                ``fused_remap``
+  ref           unfused oracle-shaped path: materialize the (S, R)
+                Hadamard partials, then segment-sum — the baseline the
+                paper's fusion argument (Fig. 7) is measured against
+  ============  =========================================================
 """
 from __future__ import annotations
 
@@ -69,7 +91,13 @@ def compute_lrow(idx_d, row_relabel_d, rows_pp: int, alive):
 
 
 def _gather_partials(layout, factors, mode: int, accum_dtype):
-    """ell(r) = val * prod_{w != d} Y_w[c_w, r]  (Alg. 2 lines 7-13)."""
+    """ell(r) = val * prod_{w != d} Y_w[c_w, r]  (Alg. 2 lines 7-13).
+
+    Pad slots are masked via ``lrow == -1`` rather than relying on their
+    ``val`` being zero: pads carry in-bounds ``idx = 0``, so an unmasked
+    product would dump ``val * prod Y_w[0]`` into segment 0 (the Pallas
+    kernels get this for free from the one-hot comparison).
+    """
     val, idx = layout["val"], layout["idx"]
     partials = val[:, None].astype(accum_dtype)
     for w, f in enumerate(factors):
@@ -77,7 +105,7 @@ def _gather_partials(layout, factors, mode: int, accum_dtype):
             continue
         partials = partials * jnp.take(f, idx[:, w], axis=0, mode="fill",
                                        fill_value=0.0).astype(accum_dtype)
-    return partials
+    return jnp.where((layout["lrow"] >= 0)[:, None], partials, 0)
 
 
 def _segment_ids(layout, plan: ModeStatic):
@@ -138,5 +166,68 @@ def ec_pallas(layout, factors, mode: int, *, plan: ModeStatic,
     )
 
 
+def _fused_lidx(layout, nmodes: int, mode: int):
+    """(N-1, S) scalar-prefetch table: per slot, the row of each *input*
+    factor to gather (pads hold in-bounds 0 — killed later by the one-hot
+    / dst < 0, so the garbage gather is harmless)."""
+    idx = layout["idx"]
+    return jnp.stack([idx[:, w] for w in range(nmodes) if w != mode]
+                     ).astype(jnp.int32)
+
+
+@register_backend("pallas_fused")
+def ec_pallas_fused(layout, factors, mode: int, *, plan: ModeStatic,
+                    config: ExecutionConfig) -> jax.Array:
+    """Zero-HBM-intermediate Pallas pipeline: the factor-row gather happens
+    inside the kernel grid (scalar-prefetched indices, double-buffered
+    ANY->VMEM row DMA), so no ``(S, N-1, R)`` intermediate is ever
+    materialized. This entry is the plain-EC contract used under
+    ``shard_map`` too; the single-device scan step upgrades to
+    ``fused_remap`` below."""
+    from repro.kernels import ops as kops
+
+    inputs = tuple(f for w, f in enumerate(factors) if w != mode)
+    return kops.mttkrp_fused_gather(
+        layout["val"],
+        layout["lrow"],
+        _fused_lidx(layout, len(factors), mode),
+        inputs,
+        kappa=plan.kappa,
+        rows_pp=plan.rows_pp,
+        blocks_pp=plan.blocks_pp,
+        block_p=plan.block_p,
+        interpret=config.resolve_interpret(),
+    )
+
+
+def _pallas_fused_remap(layout, factors, mode: int, *, plan: ModeStatic,
+                        config: ExecutionConfig, smax: int, next_mode: int):
+    """EC + Alg. 3 remap in ONE Pallas pass (see module docstring). The
+    remap destinations are ``alpha[:, next_mode]`` verbatim: alive slots
+    hold their next-layout slot, pads hold -1 and are skipped in-kernel."""
+    from repro.kernels import ops as kops
+
+    inputs = tuple(f for w, f in enumerate(factors) if w != mode)
+    out_rel, nval, nidx, nalpha = kops.mttkrp_fused_remap(
+        layout["val"],
+        layout["idx"],
+        layout["alpha"],
+        layout["lrow"],
+        _fused_lidx(layout, len(factors), mode),
+        inputs,
+        kappa=plan.kappa,
+        rows_pp=plan.rows_pp,
+        blocks_pp=plan.blocks_pp,
+        block_p=plan.block_p,
+        smax=smax,
+        next_mode=next_mode,
+        interpret=config.resolve_interpret(),
+    )
+    return out_rel, (nval, nidx, nalpha)
+
+
+ec_pallas_fused.fused_remap = _pallas_fused_remap
+
+
 __all__ = ["BACKENDS", "register_backend", "get_backend", "compute_lrow",
-           "ec_xla", "ec_ref", "ec_pallas"]
+           "ec_xla", "ec_ref", "ec_pallas", "ec_pallas_fused"]

@@ -18,6 +18,14 @@ import jax
 KAPPA_POLICIES = ("vmem", "fixed")
 
 
+def platform_default_interpret() -> bool:
+    """Single source of the Pallas interpret-mode platform default: run the
+    kernels through Mosaic only on a real TPU, interpret everywhere else.
+    Both ``ExecutionConfig.resolve_interpret`` and ``repro.kernels.ops``
+    defer here, so engine and kernels can never disagree."""
+    return jax.default_backend() != "tpu"
+
+
 @dataclasses.dataclass(frozen=True)
 class ExecutionConfig:
     """Static execution policy for the engine (hashable, jit-cache safe).
@@ -38,6 +46,17 @@ class ExecutionConfig:
       donate: donate the layout buffers into the jitted scan (the paper's
         T_in/T_out swap without a second live copy). ``None`` = auto:
         donate only where XLA supports it (TPU/GPU).
+      fuse_remap: let a fusing backend (one exposing ``fused_remap``, e.g.
+        ``pallas_fused``) emit the Alg. 3 remap scatter inside its kernel
+        pass instead of the three full-``S_max`` XLA scatters in the scan
+        step. ``False`` forces the XLA scatter path for any backend (the
+        comparison baseline).
+      vmem_budget_bytes: VMEM budget the ``"vmem"`` kappa policy sizes row
+        tiles against when ``rows_pp`` is not given explicitly. ``None`` =
+        library default tile (``partition.DEFAULT_ROWS_PER_PARTITION``).
+      rank_hint: rank R used to convert the VMEM budget into rows (the
+        paper's default R=32); only consulted when ``vmem_budget_bytes``
+        is set.
     """
 
     backend: str = "xla"
@@ -48,6 +67,9 @@ class ExecutionConfig:
     rows_pp: int | None = None
     precision: str = "float32"
     donate: bool | None = None
+    fuse_remap: bool = True
+    vmem_budget_bytes: int | None = None
+    rank_hint: int = 32
 
     def __post_init__(self):
         if self.kappa_policy not in KAPPA_POLICIES:
@@ -55,11 +77,13 @@ class ExecutionConfig:
                 f"kappa_policy {self.kappa_policy!r} not in {KAPPA_POLICIES}")
         if self.kappa_policy == "fixed" and self.kappa is None:
             raise ValueError("kappa_policy='fixed' requires kappa")
+        if self.vmem_budget_bytes is not None and self.vmem_budget_bytes < 1:
+            raise ValueError("vmem_budget_bytes must be positive")
 
     # ------------------------------------------------------------ resolution
     def resolve_interpret(self) -> bool:
         if self.interpret is None:
-            return jax.default_backend() != "tpu"
+            return platform_default_interpret()
         return bool(self.interpret)
 
     def resolve_donate(self) -> bool:
@@ -72,6 +96,22 @@ class ExecutionConfig:
         import jax.numpy as jnp
 
         return jnp.dtype(self.precision)
+
+    def resolve_rows_pp(self) -> int | None:
+        """Rows per partition for the ``"vmem"`` kappa policy.
+
+        Explicit ``rows_pp`` wins. Otherwise, with a ``vmem_budget_bytes``
+        the tile is sized so the fused kernel's resident f32 output tile
+        (``rows_pp * rank_hint * 4`` bytes) uses at most half the budget —
+        the other half is reserved for the double-buffered factor-row
+        staging and the one-hot operand. ``None`` means the library default
+        tile (``partition.DEFAULT_ROWS_PER_PARTITION``).
+        """
+        if self.rows_pp is not None:
+            return self.rows_pp
+        if self.vmem_budget_bytes is None:
+            return None
+        return max(8, self.vmem_budget_bytes // (2 * 4 * self.rank_hint))
 
     def kappa_for(self, dim: int, n_dev: int = 1) -> int:
         """Partition count for a mode of size ``dim`` under this config's
@@ -88,8 +128,8 @@ class ExecutionConfig:
         else:
             from repro.core.partition import choose_kappa
 
-            base = choose_kappa(
-                dim, self.rows_pp) if self.rows_pp else choose_kappa(dim)
+            rows_pp = self.resolve_rows_pp()
+            base = choose_kappa(dim, rows_pp) if rows_pp else choose_kappa(dim)
         if n_dev <= 1:
             return min(base, dim)
         if dim < n_dev:
@@ -100,4 +140,4 @@ class ExecutionConfig:
         return min(kappa, (dim // n_dev) * n_dev)
 
 
-__all__ = ["ExecutionConfig", "KAPPA_POLICIES"]
+__all__ = ["ExecutionConfig", "KAPPA_POLICIES", "platform_default_interpret"]

@@ -415,9 +415,14 @@ def _dist_mode_branch(d: int, *, statics: Sequence[ModeStatic], n_dev: int,
         v, ix, al = val[:sloc], idx[:sloc], alpha[:sloc]
         alive = al[:, d] >= 0
         # EC over owned partitions only (Obs. 2: rows owned exclusively,
-        # so the segment-sum needs no cross-device reduction).
+        # so the segment-sum needs no cross-device reduction). Backends see
+        # the exact same contract as the single-device scan; fusing
+        # backends (``pallas_fused``) run their plain-EC entry here — the
+        # remap is the cross-device exchange below, not a local scatter —
+        # so the in-kernel gather fusion still applies per shard.
         lrow = compute_lrow(ix[:, d], relabels[d], s.rows_pp, alive)
-        out_rel_loc = backend({"val": v, "idx": ix, "lrow": lrow},
+        out_rel_loc = backend({"val": v, "idx": ix, "alpha": al,
+                               "lrow": lrow},
                               tuple(factors), d, plan=lplan, config=config)
         # Devices own contiguous relabeled-row ranges (kappa % n_dev == 0),
         # so a tiled output gather IS the global relabeled result. This is

@@ -1,4 +1,4 @@
-"""Fused spMTTKRP elementwise-computation Pallas TPU kernel.
+"""Fused spMTTKRP elementwise-computation Pallas TPU kernels.
 
 This is the TPU adaptation of the paper's thread-block kernel (Alg. 2/4):
 
@@ -15,7 +15,30 @@ This is the TPU adaptation of the paper's thread-block kernel (Alg. 2/4):
     and no cross-block reduction exists.
 
 Pad slots carry lrow = -1; the one-hot comparison yields an all-zero column
-for them, so they contribute nothing (their val is 0 anyway).
+for them, so they contribute nothing even when a pad val is nonzero.
+
+Two pipelines:
+
+  ``mttkrp_fused``         takes a pre-gathered ``(S, N-1, R)`` array that
+                           XLA materializes in HBM before the kernel runs —
+                           the comparison baseline (engine backend
+                           ``pallas``).
+  ``mttkrp_fused_gather``  zero-HBM-intermediate pipeline (engine backend
+                           ``pallas_fused``): the per-slot factor-row
+                           indices are *scalar-prefetched* into SMEM
+                           (``PrefetchScalarGridSpec``), the factor matrices
+                           stay in ``ANY``/HBM, and each grid step DMAs the
+                           P needed rows of every input factor into a
+                           double-buffered VMEM stage (block b+1's gather is
+                           in flight while block b computes). The
+                           ``(S, N-1, R)`` gathered intermediate never
+                           exists.
+  ``mttkrp_fused_remap``   same pass, plus the Alg. 3 dynamic remap: the
+                           kernel scatters each alive slot's (val, idx,
+                           alpha) row to its ``alpha[:, next]`` destination
+                           in VMEM-resident next-layout buffers, replacing
+                           the three separate full-``S_max`` XLA scatters
+                           the scan step used to issue.
 
 Block shape knobs mirror the paper's R x P thread block (Fig. 4): P is the
 number of nonzeros entering per step (paper picks P=32 for 1024-thread
@@ -29,16 +52,19 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _ec_kernel(gathered_ref, val_ref, lrow_ref, out_ref, *, rows_pp: int):
-    """One (partition j, block t) grid step."""
+def _ec_compute(parts, val_ref, lrow_ref, out_ref, *, rows_pp: int):
+    """Shared EC body of both pipelines: Hadamard the staged factor rows,
+    scale by val, one-hot-MXU segment-reduce into the resident out tile.
+    ``parts`` is the per-input-mode list of (P, R) row blocks (however they
+    were staged — HBM operand or in-kernel DMA)."""
     t = pl.program_id(1)
 
-    g = gathered_ref[...]                      # (P, N-1, R) f32
-    ell = g[:, 0, :]
-    for w in range(1, g.shape[1]):             # Hadamard across input modes
-        ell = ell * g[:, w, :]                 # (Alg. 2 lines 11-13)
+    ell = parts[0]
+    for part in parts[1:]:                     # Hadamard across input modes
+        ell = ell * part                       # (Alg. 2 lines 11-13)
     ell = ell * val_ref[...]                   # (P, 1) broadcast: * val_i
 
     lrow = lrow_ref[...][:, 0]                 # (P,) local output row ids
@@ -54,6 +80,13 @@ def _ec_kernel(gathered_ref, val_ref, lrow_ref, out_ref, *, rows_pp: int):
         out_ref[...] = jnp.zeros_like(out_ref)
 
     out_ref[...] += contrib
+
+
+def _ec_kernel(gathered_ref, val_ref, lrow_ref, out_ref, *, rows_pp: int):
+    """One (partition j, block t) grid step."""
+    g = gathered_ref[...]                      # (P, N-1, R) f32
+    _ec_compute([g[:, w, :] for w in range(g.shape[1])], val_ref, lrow_ref,
+                out_ref, rows_pp=rows_pp)
 
 
 @functools.partial(
@@ -95,3 +128,214 @@ def mttkrp_fused(
         out_shape=jax.ShapeDtypeStruct((kappa * rows_pp, r), jnp.float32),
         interpret=interpret,
     )(gathered, val2, lrow2)
+
+
+# --------------------------------------------------------------------------
+# Zero-HBM-intermediate pipeline: in-kernel gather (+ optional remap).
+# --------------------------------------------------------------------------
+def _fused_gather_kernel(lidx_ref, *refs, nm1: int, rows_pp: int,
+                         blocks_pp: int, block_p: int, nblocks: int,
+                         next_mode: int | None):
+    """One (partition j, block t) step of the fused pipeline.
+
+    ``lidx_ref`` is the scalar-prefetched ``(N-1, S)`` factor-row index
+    table (SMEM). The input factors live in ``ANY`` (HBM on TPU); their
+    needed rows are DMA'd into the two-slot VMEM stage ``scratch`` so block
+    ``b+1``'s gather overlaps block ``b``'s compute. With ``next_mode``
+    set, the kernel additionally owns VMEM-resident next-layout buffers and
+    scatters every alive slot to its ``alpha[:, next_mode]`` destination.
+    """
+    with_remap = next_mode is not None
+    if with_remap:
+        val_ref, lrow_ref, idx_ref, alpha_ref = refs[:4]
+        facs = refs[4:4 + nm1]
+        (out_ref, nval_ref, nidx_ref, nalpha_ref,
+         scratch, sems) = refs[4 + nm1:]
+    else:
+        val_ref, lrow_ref = refs[:2]
+        facs = refs[2:2 + nm1]
+        out_ref, scratch, sems = refs[2 + nm1:]
+
+    j = pl.program_id(0)
+    t = pl.program_id(1)
+    b = j * blocks_pp + t
+    slot = b % 2
+
+    def gather(block, sl, wait: bool):
+        # One (1, R) row copy per (factor, slot); starts and waits pair up
+        # through the per-buffer DMA semaphore ``sems[sl]``.
+        for w, f in enumerate(facs):
+            def body(i, _, w=w, f=f):
+                row = lidx_ref[w, block * block_p + i]
+                cp = pltpu.make_async_copy(
+                    f.at[pl.ds(row, 1)],
+                    scratch.at[sl, w, pl.ds(i, 1)],
+                    sems.at[sl])
+                (cp.wait if wait else cp.start)()
+                return 0
+
+            lax.fori_loop(0, block_p, body, 0)
+
+    @pl.when(b == 0)
+    def _prologue():                       # block 0 has nobody to hide under
+        gather(0, 0, wait=False)
+
+    @pl.when(b + 1 < nblocks)
+    def _prefetch_next():                  # overlap: issue b+1, compute b
+        gather(b + 1, (b + 1) % 2, wait=False)
+
+    gather(b, slot, wait=True)
+
+    g = scratch[pl.ds(slot, 1)][0]         # (N-1, P, R) staged factor rows
+    _ec_compute([g[w] for w in range(nm1)], val_ref, lrow_ref, out_ref,
+                rows_pp=rows_pp)
+
+    if not with_remap:
+        return
+
+    @pl.when(b == 0)
+    def _init_next_layout():
+        nval_ref[...] = jnp.zeros_like(nval_ref)
+        nidx_ref[...] = jnp.zeros_like(nidx_ref)
+        nalpha_ref[...] = jnp.full_like(nalpha_ref, -1)
+
+    def scatter(i, _):
+        # Alg. 3: conflict-free by construction — destinations are a
+        # permutation of the alive slots; pads carry alpha = -1.
+        d = alpha_ref[i, next_mode]
+
+        @pl.when(d >= 0)
+        def _move():
+            nval_ref[pl.ds(d, 1), :] = val_ref[pl.ds(i, 1), :]
+            nidx_ref[pl.ds(d, 1), :] = idx_ref[pl.ds(i, 1), :]
+            nalpha_ref[pl.ds(d, 1), :] = alpha_ref[pl.ds(i, 1), :]
+        return 0
+
+    lax.fori_loop(0, block_p, scatter, 0)
+
+
+def _fused_specs(nm1: int, r: int, block_p: int, blocks_pp: int,
+                 rows_pp: int):
+    """Shared in/out specs of the fused pipelines (scalar-prefetch aware:
+    index maps take the prefetch ref as trailing argument)."""
+    def eblk(j, t, lidx, bpp=blocks_pp):
+        return (j * bpp + t, 0)
+
+    elem = pl.BlockSpec((block_p, 1), eblk)
+    fac = pl.BlockSpec(memory_space=pltpu.ANY)
+    out = pl.BlockSpec((rows_pp, r), lambda j, t, lidx: (j, 0))
+    scratch = [pltpu.VMEM((2, nm1, block_p, r), jnp.float32),
+               pltpu.SemaphoreType.DMA((2,))]
+    return elem, fac, out, scratch
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kappa", "rows_pp", "blocks_pp", "block_p", "interpret"),
+)
+def mttkrp_fused_gather(
+    val: jax.Array,        # (S,) nonzero values (0 in pads)
+    lrow: jax.Array,       # (S,) local output rows (-1 in pads)
+    lidx: jax.Array,       # (N-1, S) input-factor row per slot (prefetched)
+    factors: tuple,        # N-1 arrays (I_w, R), kept in ANY/HBM
+    *,
+    kappa: int,
+    rows_pp: int,
+    blocks_pp: int,
+    block_p: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """EC with the factor gather fused into the kernel grid; returns
+    out_rel (kappa*rows_pp, R) without materializing (S, N-1, R) in HBM."""
+    s = val.shape[0]
+    nm1 = len(factors)
+    r = factors[0].shape[1]
+    nblocks = kappa * blocks_pp
+    assert s == nblocks * block_p, (s, kappa, blocks_pp, block_p)
+    assert lidx.shape == (nm1, s), (lidx.shape, nm1, s)
+    val2 = val.reshape(s, 1).astype(jnp.float32)
+    lrow2 = lrow.reshape(s, 1).astype(jnp.int32)
+
+    elem, fac, out, scratch = _fused_specs(nm1, r, block_p, blocks_pp,
+                                           rows_pp)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(kappa, blocks_pp),
+        in_specs=[elem, elem] + [fac] * nm1,
+        out_specs=out,
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_gather_kernel, nm1=nm1, rows_pp=rows_pp,
+                          blocks_pp=blocks_pp, block_p=block_p,
+                          nblocks=nblocks, next_mode=None),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((kappa * rows_pp, r), jnp.float32),
+        interpret=interpret,
+    )(lidx.astype(jnp.int32), val2, lrow2, *factors)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kappa", "rows_pp", "blocks_pp", "block_p", "smax",
+                     "next_mode", "interpret"),
+)
+def mttkrp_fused_remap(
+    val: jax.Array,        # (S,) nonzero values (0 in pads)
+    idx: jax.Array,        # (S, N) original indices
+    alpha: jax.Array,      # (S, N) per-mode slot table (-1 in pads)
+    lrow: jax.Array,       # (S,) local output rows (-1 in pads)
+    lidx: jax.Array,       # (N-1, S) input-factor row per slot (prefetched)
+    factors: tuple,        # N-1 arrays (I_w, R), kept in ANY/HBM
+    *,
+    kappa: int,
+    rows_pp: int,
+    blocks_pp: int,
+    block_p: int,
+    smax: int,
+    next_mode: int,
+    interpret: bool = False,
+):
+    """Fused EC + Alg. 3 remap: one Pallas pass returning
+    ``(out_rel, nval, nidx, nalpha)`` with the next layout scattered
+    in-kernel to the ``alpha[:, next_mode]`` destinations (no separate
+    full-``S_max`` XLA scatters, no separate destination stream)."""
+    s = val.shape[0]
+    n = idx.shape[1]
+    nm1 = len(factors)
+    r = factors[0].shape[1]
+    nblocks = kappa * blocks_pp
+    assert s == nblocks * block_p, (s, kappa, blocks_pp, block_p)
+    assert s <= smax and lidx.shape == (nm1, s)
+    assert 0 <= next_mode < n
+    val2 = val.reshape(s, 1).astype(jnp.float32)
+    lrow2 = lrow.reshape(s, 1).astype(jnp.int32)
+
+    elem, fac, out, scratch = _fused_specs(nm1, r, block_p, blocks_pp,
+                                           rows_pp)
+    eblk_n = pl.BlockSpec((block_p, n),
+                          lambda j, t, lidx, bpp=blocks_pp: (j * bpp + t, 0))
+    resident1 = pl.BlockSpec((smax, 1), lambda j, t, lidx: (0, 0))
+    resident_n = pl.BlockSpec((smax, n), lambda j, t, lidx: (0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(kappa, blocks_pp),
+        in_specs=[elem, elem, eblk_n, eblk_n] + [fac] * nm1,
+        out_specs=[out, resident1, resident_n, resident_n],
+        scratch_shapes=scratch,
+    )
+    out_rel, nval, nidx, nalpha = pl.pallas_call(
+        functools.partial(_fused_gather_kernel, nm1=nm1, rows_pp=rows_pp,
+                          blocks_pp=blocks_pp, block_p=block_p,
+                          nblocks=nblocks, next_mode=next_mode),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((kappa * rows_pp, r), jnp.float32),
+            jax.ShapeDtypeStruct((smax, 1), jnp.float32),
+            jax.ShapeDtypeStruct((smax, n), jnp.int32),
+            jax.ShapeDtypeStruct((smax, n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(lidx.astype(jnp.int32), val2, lrow2, idx.astype(jnp.int32),
+      alpha.astype(jnp.int32), *factors)
+    return out_rel, nval[:, 0], nidx, nalpha

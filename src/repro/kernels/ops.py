@@ -8,21 +8,22 @@ XLA reference paths so ``cost_analysis()`` reports honest HLO (DESIGN.md §6).
 Interpret resolution is policy, not plumbing: every wrapper accepts either
 an explicit ``interpret=`` or an :class:`repro.engine.ExecutionConfig`
 (``config=``) and defers to ``config.resolve_interpret()`` — the same
-policy object that keys the engine's backend registry, so kernel and
-engine can never disagree about execution mode.
+policy object that keys the engine's backend registry. The platform
+default itself lives in ONE place,
+:func:`repro.engine.config.platform_default_interpret`, which both the
+config and these wrappers consult, so kernel and engine can never disagree
+about execution mode.
 """
 from __future__ import annotations
 
-import jax
+from repro.engine.config import platform_default_interpret
 
 from . import ref
 from .mttkrp_kernel import mttkrp_fused as _mttkrp_fused
+from .mttkrp_kernel import mttkrp_fused_gather as _mttkrp_fused_gather
+from .mttkrp_kernel import mttkrp_fused_remap as _mttkrp_fused_remap
 from .lru_scan import lru_scan as _lru_scan
 from .wkv6 import wkv6 as _wkv6
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def resolve_interpret(interpret: bool | None = None, config=None) -> bool:
@@ -32,7 +33,7 @@ def resolve_interpret(interpret: bool | None = None, config=None) -> bool:
         return bool(interpret)
     if config is not None:
         return config.resolve_interpret()
-    return _default_interpret()
+    return platform_default_interpret()
 
 
 def mttkrp_fused(gathered, val, lrow, *, kappa, rows_pp, blocks_pp, block_p,
@@ -40,6 +41,27 @@ def mttkrp_fused(gathered, val, lrow, *, kappa, rows_pp, blocks_pp, block_p,
     return _mttkrp_fused(gathered, val, lrow, kappa=kappa, rows_pp=rows_pp,
                          blocks_pp=blocks_pp, block_p=block_p,
                          interpret=resolve_interpret(interpret, config))
+
+
+def mttkrp_fused_gather(val, lrow, lidx, factors, *, kappa, rows_pp,
+                        blocks_pp, block_p, interpret: bool | None = None,
+                        config=None):
+    """Zero-HBM-intermediate EC: factor rows gathered inside the kernel."""
+    return _mttkrp_fused_gather(
+        val, lrow, lidx, tuple(factors), kappa=kappa, rows_pp=rows_pp,
+        blocks_pp=blocks_pp, block_p=block_p,
+        interpret=resolve_interpret(interpret, config))
+
+
+def mttkrp_fused_remap(val, idx, alpha, lrow, lidx, factors, *, kappa,
+                       rows_pp, blocks_pp, block_p, smax, next_mode,
+                       interpret: bool | None = None, config=None):
+    """Fused EC + Alg. 3 remap scatter (one Pallas pass, four outputs)."""
+    return _mttkrp_fused_remap(
+        val, idx, alpha, lrow, lidx, tuple(factors), kappa=kappa,
+        rows_pp=rows_pp, blocks_pp=blocks_pp, block_p=block_p, smax=smax,
+        next_mode=next_mode,
+        interpret=resolve_interpret(interpret, config))
 
 
 def lru_scan(a, x, *, chunk: int = 32, interpret: bool | None = None,
@@ -54,4 +76,5 @@ def wkv6(r, k, w, v, u, *, chunk: int = 16, interpret: bool | None = None,
                  interpret=resolve_interpret(interpret, config))
 
 
-__all__ = ["mttkrp_fused", "lru_scan", "wkv6", "ref", "resolve_interpret"]
+__all__ = ["mttkrp_fused", "mttkrp_fused_gather", "mttkrp_fused_remap",
+           "lru_scan", "wkv6", "ref", "resolve_interpret"]

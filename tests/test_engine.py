@@ -47,7 +47,7 @@ def _refs(idx, val, factors, dims):
 # --------------------------------------------------------------------------
 # Backend parity across mode counts (incl. the paper's >4-mode claim).
 # --------------------------------------------------------------------------
-@pytest.mark.parametrize("backend", ["xla", "pallas", "ref"])
+@pytest.mark.parametrize("backend", ["xla", "pallas", "pallas_fused", "ref"])
 @pytest.mark.parametrize("nmodes", [3, 4, 5, 6])
 def test_all_modes_backend_parity(backend, nmodes):
     dims = DIMS_BY_NMODES[nmodes]
@@ -60,6 +60,48 @@ def test_all_modes_backend_parity(backend, nmodes):
         for d in range(nmodes):
             np.testing.assert_allclose(outs[d], refs[d], rtol=2e-4,
                                        atol=2e-4)
+
+
+@pytest.mark.parametrize("nmodes", [3, 4, 5, 6])
+def test_pallas_fused_any_start_and_step(nmodes):
+    """The fused EC+remap pipeline works from any resident mode, both as
+    the scanned rotation and stepped one dispatch at a time."""
+    dims = DIMS_BY_NMODES[nmodes]
+    idx, val, t = _tensor(nmodes + 20, dims, 600, rows_pp=4, block_p=8)
+    factors = tuple(init_factors(jax.random.PRNGKey(5), dims, 8))
+    refs = _refs(idx, val, factors, dims)
+    cfg = ExecutionConfig(backend="pallas_fused", interpret=True)
+    for start in (0, nmodes - 1):
+        state = engine.init(t, cfg, start_mode=start)
+        outs, state = engine.all_modes(state, factors)
+        assert state.mode == start
+        for d in range(nmodes):
+            np.testing.assert_allclose(outs[d], refs[d], rtol=2e-4,
+                                       atol=2e-4)
+    state = engine.init(t, cfg, start_mode=1)
+    for i in range(nmodes):
+        out, state = engine.mttkrp(state, factors)
+        np.testing.assert_allclose(out, refs[(1 + i) % nmodes], rtol=2e-4,
+                                   atol=2e-4)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas", "pallas_fused", "ref"])
+def test_pad_slots_cannot_pollute_row_zero(backend):
+    """Pad slots (lrow == -1) are dumped into segment 0 by the XLA
+    segment-sum paths and carry in-bounds idx = 0 — so their contribution
+    must be masked structurally, not by relying on pad val == 0. Forcing
+    every pad val to a nonzero value must leave ALL outputs (in particular
+    the user row that relabels to row 0) bit-identical to the oracle."""
+    dims = DIMS_BY_NMODES[4]
+    idx, val, t = _tensor(8, dims, 500, rows_pp=4, block_p=8)
+    factors = tuple(init_factors(jax.random.PRNGKey(7), dims, 8))
+    refs = _refs(idx, val, factors, dims)
+    state = engine.init(t, ExecutionConfig(backend=backend, interpret=True))
+    poisoned = state.replace(
+        val=jnp.where(state.alpha[:, state.mode] < 0, 7.25, state.val))
+    outs, _ = engine.all_modes(poisoned, factors)
+    for d in range(4):
+        np.testing.assert_allclose(outs[d], refs[d], rtol=2e-4, atol=2e-4)
 
 
 @pytest.mark.parametrize("nmodes", [3, 4, 5, 6])
@@ -113,6 +155,69 @@ def test_all_modes_is_single_scanned_dispatch():
 
     jaxpr = str(engine.scan_jaxpr(state, factors))
     assert "scan" in jaxpr, "all_modes must lower to a lax.scan program"
+
+
+# --------------------------------------------------------------------------
+# Zero-HBM-intermediate acceptance: the fused scan step materializes no
+# (S_d, N-1, R) gathered buffer (the unfused pallas backend does).
+# --------------------------------------------------------------------------
+def _scan_hlo(t, backend, factors):
+    from repro.engine.api import _build_scan
+
+    state = engine.init(t, ExecutionConfig(backend=backend, interpret=True,
+                                           donate=False))
+    fn = _build_scan(state, None)
+    return state, jax.jit(fn).lower(
+        (state.val, state.idx, state.alpha), state.relabel, tuple(factors),
+        None).as_text()
+
+
+def test_fused_scan_has_no_gathered_intermediate():
+    dims = DIMS_BY_NMODES[4]
+    rank = 8
+    _, _, t = _tensor(6, dims, 600, rows_pp=4, block_p=8)
+    factors = tuple(init_factors(jax.random.PRNGKey(9), dims, rank))
+    nm1 = len(dims) - 1
+
+    state, fused_txt = _scan_hlo(t, "pallas_fused", factors)
+    gathered_types = [f"tensor<{s.padded_nnz}x{nm1}x{rank}xf32>"
+                      for s in state.statics]
+    for ty in gathered_types:
+        assert ty not in fused_txt, \
+            f"pallas_fused scan step materializes a gathered buffer {ty}"
+
+    # ... while the unfused pallas baseline does stage it through HBM.
+    _, base_txt = _scan_hlo(t, "pallas", factors)
+    assert any(ty in base_txt for ty in gathered_types), \
+        "baseline should show the (S, N-1, R) gathered intermediate"
+
+
+def test_fuse_remap_knob_and_vmem_budget():
+    """fuse_remap=False forces the XLA scatter path (bit-parity with the
+    fused one); vmem_budget_bytes sizes the vmem-policy row tiles."""
+    dims = DIMS_BY_NMODES[3]
+    idx, val, t = _tensor(12, dims, 400, rows_pp=4, block_p=8)
+    factors = tuple(init_factors(jax.random.PRNGKey(3), dims, 8))
+    outs_f, _ = engine.all_modes(
+        engine.init(t, ExecutionConfig(backend="pallas_fused",
+                                       interpret=True)), factors)
+    outs_u, _ = engine.all_modes(
+        engine.init(t, ExecutionConfig(backend="pallas_fused",
+                                       interpret=True, fuse_remap=False)),
+        factors)
+    for a, b in zip(outs_f, outs_u):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    # VMEM budget -> rows_pp -> kappa: 64 KiB at R=32 (4 B) halves to 256
+    # rows; explicit rows_pp still wins; no budget = library default.
+    budget = ExecutionConfig(vmem_budget_bytes=64 * 1024)
+    assert budget.resolve_rows_pp() == 256
+    assert budget.kappa_for(1000) == 4  # ceil(1000 / 256)
+    assert ExecutionConfig(vmem_budget_bytes=64 * 1024,
+                           rows_pp=100).resolve_rows_pp() == 100
+    assert ExecutionConfig().resolve_rows_pp() is None
+    with pytest.raises(ValueError, match="vmem_budget_bytes"):
+        ExecutionConfig(vmem_budget_bytes=0)
 
 
 # --------------------------------------------------------------------------

@@ -25,6 +25,76 @@ def test_mttkrp_fused_shapes(kappa, rows_pp, blocks_pp, p, nm1, r):
     np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
 
 
+def _gather_case(seed, kappa, rows_pp, blocks_pp, p, nm1, r):
+    """Random fused-gather kernel inputs + the composed oracle target."""
+    rng = np.random.default_rng(seed)
+    s = kappa * blocks_pp * p
+    dims_in = [int(rng.integers(8, 40)) for _ in range(nm1)]
+    facs = tuple(jnp.asarray(rng.standard_normal((d, r)).astype(np.float32))
+                 for d in dims_in)
+    lidx = np.stack([rng.integers(0, d, s) for d in dims_in]).astype(np.int32)
+    val = rng.standard_normal(s).astype(np.float32)
+    lrow = rng.integers(-1, rows_pp, s).astype(np.int32)
+    val[lrow < 0] = 0.0
+    gathered = jnp.stack([facs[w][lidx[w]] for w in range(nm1)], axis=1)
+    exp = ref.mttkrp_fused_ref(gathered, jnp.asarray(val), jnp.asarray(lrow),
+                               kappa=kappa, rows_pp=rows_pp,
+                               blocks_pp=blocks_pp, block_p=p)
+    return facs, jnp.asarray(lidx), jnp.asarray(val), jnp.asarray(lrow), exp
+
+
+@pytest.mark.parametrize("kappa,rows_pp,blocks_pp,p", [
+    (2, 8, 1, 8), (4, 16, 3, 16), (3, 4, 2, 32),
+])
+@pytest.mark.parametrize("nm1,r", [(2, 8), (3, 32), (5, 16)])
+def test_mttkrp_fused_gather_shapes(kappa, rows_pp, blocks_pp, p, nm1, r):
+    """In-kernel gather == XLA gather + baseline kernel oracle."""
+    facs, lidx, val, lrow, exp = _gather_case(
+        kappa * 100 + nm1, kappa, rows_pp, blocks_pp, p, nm1, r)
+    out = ops.mttkrp_fused_gather(val, lrow, lidx, facs, kappa=kappa,
+                                  rows_pp=rows_pp, blocks_pp=blocks_pp,
+                                  block_p=p, interpret=True)
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("kappa,rows_pp,blocks_pp,p,nm1,r", [
+    (2, 8, 1, 8, 2, 8), (3, 4, 2, 16, 3, 32),
+])
+def test_mttkrp_fused_remap_scatters_next_layout(kappa, rows_pp, blocks_pp,
+                                                 p, nm1, r):
+    """The remap variant returns the EC result AND the mode-(d+1) layout
+    (val/idx/alpha scattered to alpha[:, next]; empty slots = pad pattern),
+    matching the XLA scatter the scan step used to issue."""
+    facs, lidx, val, lrow, exp = _gather_case(
+        7 * kappa + p, kappa, rows_pp, blocks_pp, p, nm1, r)
+    rng = np.random.default_rng(p + nm1)
+    s = val.shape[0]
+    n = nm1 + 1
+    smax = s + 24
+    alive = np.asarray(lrow) >= 0
+    idx = rng.integers(0, 50, (s, n)).astype(np.int32)
+    alpha = np.full((s, n), -1, np.int32)
+    alpha[alive] = rng.integers(0, smax, (int(alive.sum()), n))
+    alpha[alive, 1] = rng.permutation(smax)[: int(alive.sum())]
+    dst = alpha[:, 1]
+
+    out, nval, nidx, nalpha = ops.mttkrp_fused_remap(
+        val, jnp.asarray(idx), jnp.asarray(alpha), lrow, lidx, facs,
+        kappa=kappa, rows_pp=rows_pp, blocks_pp=blocks_pp, block_p=p,
+        smax=smax, next_mode=1, interpret=True)
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+
+    eval_ = np.zeros(smax, np.float32)
+    eidx = np.zeros((smax, n), np.int32)
+    ealpha = np.full((smax, n), -1, np.int32)
+    eval_[dst[alive]] = np.asarray(val)[alive]
+    eidx[dst[alive]] = idx[alive]
+    ealpha[dst[alive]] = alpha[alive]
+    np.testing.assert_allclose(np.asarray(nval), eval_)
+    np.testing.assert_array_equal(np.asarray(nidx), eidx)
+    np.testing.assert_array_equal(np.asarray(nalpha), ealpha)
+
+
 @pytest.mark.parametrize("b,t,d,chunk", [
     (1, 32, 8, 8), (2, 64, 16, 16), (3, 128, 32, 32), (2, 64, 128, 64),
 ])
