@@ -5,6 +5,7 @@ dynamic tensor remapping. The paper reports 5-35% remap overhead; we time
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import MTTKRPExecutor, init_factors
 from repro.core.mttkrp import _ec_xla, compute_lrow
@@ -20,9 +21,11 @@ def _ec_only_fn(exe, mode):
         alive = layout["alpha"][:, mode] >= 0
         lrow = compute_lrow(layout["idx"][:, mode], rr, plan.rows_pp, alive)
         return _ec_xla({"val": layout["val"], "idx": layout["idx"],
-                        "lrow": lrow}, factors, mode, rows_pp=plan.rows_pp,
+                        "lrow": lrow, "bpart": layout.get("bpart")},
+                       factors, mode, rows_pp=plan.rows_pp,
                        blocks_pp=plan.blocks_pp, block_p=plan.block_p,
-                       kappa=plan.kappa)
+                       kappa=plan.kappa, schedule=plan.schedule,
+                       nblocks=plan.nblocks)
 
     return f
 
@@ -33,26 +36,21 @@ def run():
         t = load_bench_tensor(name)
         factors = tuple(init_factors(jax.random.PRNGKey(0), t.dims, RANK))
         exe = MTTKRPExecutor(t)
-        # time full mode-0 step (EC + remap) vs EC only, same layout
+        # time full mode-0 step (EC + remap) vs EC only, same layout; the
+        # compact schedule needs the mode-0 block->partition descriptor
+        layout0 = {**exe.layout, "bpart": jnp.asarray(t.plans[0].block_part)}
         ec = _ec_only_fn(exe, 0)
-        t_ec = time_fn(ec, exe.layout, factors, exe.row_relabel[0])
-
-        def full_step():
-            e = MTTKRPExecutor(t)
-            return e.step(factors)
-
-        # fused step timing: rebuilds executor state outside the timer
-        exe2 = MTTKRPExecutor(t)
-        layout0 = exe2.layout
+        t_ec = time_fn(ec, layout0, factors, exe.row_relabel[0])
 
         def fused(layout):
             from repro.core.mttkrp import mode_step
             p = t.plans[0]
-            out, nxt = mode_step(layout, factors, exe2.row_relabel[0],
+            out, nxt = mode_step(layout, factors, exe.row_relabel[0],
                                  mode=0, rows_pp=p.rows_pp,
                                  blocks_pp=p.blocks_pp, block_p=p.block_p,
                                  kappa=p.kappa,
-                                 next_size=t.plans[1].padded_nnz)
+                                 next_size=t.plans[1].padded_nnz,
+                                 schedule=p.schedule, nblocks=p.nblocks)
             return out
 
         t_full = time_fn(fused, layout0)

@@ -91,11 +91,12 @@ def run():
         gathered = jax.ShapeDtypeStruct((s, nm1, RANK), jnp.float32)
         valspec = jax.ShapeDtypeStruct((s,), jnp.float32)
         lrowspec = jax.ShapeDtypeStruct((s,), jnp.int32)
+        bpart0 = jnp.asarray(t.plans[0].block_part)
 
         def unfused(g, v, lw):
             ell = jnp.prod(g, axis=1) * v[:, None]   # (S, R) partials -> HBM
-            part = jnp.arange(s, dtype=jnp.int32) // (
-                plan.blocks_pp * plan.block_p)
+            part = jnp.take(bpart0, jnp.arange(s, dtype=jnp.int32)
+                            // plan.block_p, axis=0)
             gid = jnp.where(lw < 0, 0, part * plan.rows_pp + lw)
             return jax.ops.segment_sum(ell, gid,
                                        num_segments=plan.relabeled_rows)

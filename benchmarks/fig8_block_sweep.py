@@ -1,47 +1,99 @@
-"""Paper Fig. 8: thread-block shape sweep (P = nonzeros per block).
+"""Paper Fig. 8: thread-block shape sweep + block-schedule comparison.
 
 The paper sweeps P in {1..64} at R = 32 and finds P = 32 optimal for a
 1024-thread block. The TPU analogue sweeps the kernel block P over
 {8..256}: P sets the MXU contraction depth of the one-hot segment
-reduction and the padding overhead of the rectangular layout. We report
-wall time of the (XLA-lowered) blocked EC per P plus the analytic VMEM
+reduction and the padding overhead of the block layout. We report wall
+time of the scanned engine rotation per P plus the analytic VMEM
 footprint per block — the structural argument for the default P = 128
 (one sublane tile).
+
+On top of the P sweep, this figure records the *block-schedule* numbers
+the compact-grid work is gated on (paper challenge (3), load balance):
+per dataset — including the skewed first-class ``zipf`` tensor —
+
+  pad_slots_reduction_x   sum_d S_d under ``rect`` / under ``compact``
+  dma_rows_reduction_x    per-slot factor-row DMA copies / after in-block
+                          dedup (sum of per-block unique rows)
+  pad_block_fraction      fraction of all-pad kernel blocks, per schedule
+  imbalance               achieved max load vs the OPT lower bound
+                          ``max(mean, d_max)`` (mode-0 plan)
+
+all merged into ``benchmarks/out/results.json`` (CI gates the zipf
+reductions at >= 2x).
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import datasets, init_factors
-from repro.core.mttkrp import MTTKRPExecutor, compute_lrow, _ec_xla
 from repro.core.flycoo import build_flycoo
+from repro import engine
 
-from .common import RANK, emit, time_fn
+from .common import BENCH_DATASETS, RANK, emit, load_bench_tensor, time_fn
+
+
+def _schedule_rows(names):
+    # Partition-exercising tile knobs: the default 512-row VMEM tile
+    # collapses benchmark-scale tensors to kappa == 1 (one partition, no
+    # schedule difference to measure); 8-row tiles give tens of partitions.
+    tile = dict(rows_pp=8, block_p=32)
+    rows = []
+    for name in names:
+        t_c = load_bench_tensor(name, schedule="compact", **tile)
+        t_r = load_bench_tensor(name, schedule="rect", **tile)
+        pad_c = sum(p.padded_nnz for p in t_c.plans)
+        pad_r = sum(p.padded_nnz for p in t_r.plans)
+        models = [t_c.dma_row_model(d) for d in range(t_c.nmodes)]
+        per_slot = sum(m["per_slot_rows"] for m in models)
+        dedup = sum(m["dedup_rows"] for m in models)
+        lb = t_c.plans[0].load_balance()
+        extras = {
+            "schedule_compact_slots": pad_c,
+            "schedule_rect_slots": pad_r,
+            "pad_slots_reduction_x": round(pad_r / max(pad_c, 1), 2),
+            "dma_rows_per_slot": per_slot,
+            "dma_rows_dedup": dedup,
+            "dma_rows_reduction_x": round(per_slot / max(dedup, 1), 2),
+            "pad_block_fraction": {
+                "compact": round(
+                    sum(p.pad_block_fraction for p in t_c.plans)
+                    / t_c.nmodes, 4),
+                "rect": round(
+                    sum(p.pad_block_fraction for p in t_r.plans)
+                    / t_r.nmodes, 4),
+            },
+            "imbalance_vs_opt": round(lb["imbalance"], 3),
+            "imbalance_vs_mean": round(lb["imbalance_vs_mean"], 3),
+        }
+        rows.append((
+            f"fig8_block_sweep/schedule_{name}", 0.0,
+            f"pad_slots_reduction={extras['pad_slots_reduction_x']:.2f}x;"
+            f"dma_rows_reduction={extras['dma_rows_reduction_x']:.2f}x;"
+            f"imbalance={extras['imbalance_vs_opt']:.2f}",
+            extras))
+    return rows
 
 
 def run():
     rows = []
+    # --- block-schedule comparison (zipf always included: the skewed
+    #     stress tensor the compact schedule + dedup are gated on) -------
+    names = list(dict.fromkeys(["zipf", *BENCH_DATASETS]))
+    rows += _schedule_rows(names)
+
+    # --- P sweep on the compact schedule (scanned engine rotation) -----
     name = "nell1"
     ts = datasets.spec(name, scale=3e-4, max_nnz=60_000)
     idx, val = datasets.synthesize(ts, seed=0)
     for p in (8, 16, 32, 64, 128, 256):
         t = build_flycoo(idx, val, ts.dims, block_p=p)
         plan = t.plans[0]
-        exe = MTTKRPExecutor(t)
         factors = tuple(init_factors(jax.random.PRNGKey(0), t.dims, RANK))
-        rr = exe.row_relabel[0]
+        state = engine.init(t, engine.ExecutionConfig(donate=False))
 
-        @jax.jit
-        def ec(layout, f, rr, plan=plan):
-            alive = layout["alpha"][:, 0] >= 0
-            lrow = compute_lrow(layout["idx"][:, 0], rr, plan.rows_pp, alive)
-            return _ec_xla({"val": layout["val"], "idx": layout["idx"],
-                            "lrow": lrow}, f, 0, rows_pp=plan.rows_pp,
-                           blocks_pp=plan.blocks_pp, block_p=plan.block_p,
-                           kappa=plan.kappa)
-
-        wall = time_fn(ec, exe.layout, factors, rr)
+        wall = time_fn(lambda f: engine.all_modes(state, f)[0],
+                       factors) / t.nmodes
         pad = plan.padded_nnz / t.nnz
         # kernel VMEM/block: gathered (P, N-1, R) + out tile (rows_pp, R) f32
         vmem_kb = (p * (t.nmodes - 1) * RANK + plan.rows_pp * RANK) * 4 / 1024

@@ -25,26 +25,41 @@ PAPER_TENSORS: dict[str, tuple[tuple[int, ...], int]] = {
     "vast": ((165_400, 11_400, 2, 100, 89), 26_000_000),
 }
 
+# Synthetic first-class datasets (not from the paper's Table 3). "zipf" is
+# the skewed stress tensor for the load-balanced compact schedule and the
+# in-block hot-row dedup: a steep power law (a = 2.0) concentrates nonzeros
+# on a few hot rows of every mode while the dimensions stay large enough
+# that benchmark scales still yield many partitions.
+SYNTH_TENSORS: dict[str, tuple[tuple[int, ...], int, float]] = {
+    "zipf": ((2_000_000, 1_500_000, 1_000_000), 40_000_000, 2.0),
+}
+
+DEFAULT_ZIPF_A = 1.2
+
 
 @dataclasses.dataclass(frozen=True)
 class TensorSpec:
     name: str
     dims: tuple[int, ...]
     nnz: int
+    zipf_a: float = DEFAULT_ZIPF_A  # power-law exponent of the mode indices
 
 
 def spec(name: str, scale: float = 1e-3, min_dim: int = 2,
          max_nnz: int | None = None) -> TensorSpec:
-    dims, nnz = PAPER_TENSORS[name]
+    if name in PAPER_TENSORS:
+        (dims, nnz), a = PAPER_TENSORS[name], DEFAULT_ZIPF_A
+    else:
+        dims, nnz, a = SYNTH_TENSORS[name]
     sdims = tuple(max(min_dim, int(round(d * scale))) for d in dims)
     snnz = max(1000, int(round(nnz * scale)))
     if max_nnz is not None:
         snnz = min(snnz, max_nnz)
-    return TensorSpec(name=name, dims=sdims, nnz=snnz)
+    return TensorSpec(name=name, dims=sdims, nnz=snnz, zipf_a=a)
 
 
 def _zipf_indices(rng: np.random.Generator, dim: int, n: int,
-                  a: float = 1.2) -> np.ndarray:
+                  a: float = DEFAULT_ZIPF_A) -> np.ndarray:
     """Heavy-tailed indices in [0, dim): Zipf ranks permuted over the dim."""
     raw = rng.zipf(a, size=n)
     idx = (raw - 1) % dim
@@ -56,7 +71,7 @@ def synthesize(ts: TensorSpec, seed: int = 0,
                dedupe: bool = True) -> tuple[np.ndarray, np.ndarray]:
     """Generate COO (indices (nnz, N), values (nnz,)) for a spec."""
     rng = np.random.default_rng(seed)
-    cols = [_zipf_indices(rng, d, ts.nnz) for d in ts.dims]
+    cols = [_zipf_indices(rng, d, ts.nnz, a=ts.zipf_a) for d in ts.dims]
     indices = np.stack(cols, axis=1)
     if dedupe:
         indices = np.unique(indices, axis=0)
@@ -73,5 +88,17 @@ def load(name: str, scale: float = 1e-3, seed: int = 0,
 
 def random_tensor(dims, nnz, seed=0, **flycoo_kw) -> FlycooTensor:
     ts = TensorSpec(name="random", dims=tuple(dims), nnz=nnz)
+    indices, values = synthesize(ts, seed=seed)
+    return build_flycoo(indices, values, ts.dims, **flycoo_kw)
+
+
+def zipf_tensor(dims, nnz, a: float = 1.5, seed: int = 0,
+                **flycoo_kw) -> FlycooTensor:
+    """First-class skewed synthetic generator: every mode's indices follow
+    a seeded Zipf power law with exponent ``a`` (steeper = more skew).
+    This is the regime the paper's degree-sorted load balancing — and the
+    compact schedule's nnz-balanced block grid — targets."""
+    ts = TensorSpec(name="zipf", dims=tuple(int(d) for d in dims),
+                    nnz=int(nnz), zipf_a=float(a))
     indices, values = synthesize(ts, seed=seed)
     return build_flycoo(indices, values, ts.dims, **flycoo_kw)

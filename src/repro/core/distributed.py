@@ -39,17 +39,21 @@ from .partition import plan_mode
 
 
 def build_sharded_flycoo(indices, values, dims, n_dev: int,
-                         rows_pp: int = 512,
-                         block_p: int = 128) -> FlycooTensor:
+                         rows_pp: int = 512, block_p: int = 128,
+                         schedule: str | None = None) -> FlycooTensor:
     """FLYCOO preprocessing with kappa forced to a multiple of n_dev, so
-    each device owns an equal, contiguous run of partitions/rows/slots.
+    each device owns an equal, contiguous run of partitions (and hence
+    rows and blocks — the compact schedule keeps blocks partition-major).
     The rounding rule lives in :meth:`ExecutionConfig.kappa_for`."""
     indices = np.asarray(indices, np.int32)
     values = np.asarray(values, np.float32)
-    cfg = ExecutionConfig(rows_pp=rows_pp, block_p=block_p)
+    cfg = ExecutionConfig(rows_pp=rows_pp, block_p=block_p,
+                          **({} if schedule is None
+                             else {"schedule": schedule}))
     plans = [
         plan_mode(indices[:, d], int(dims[d]), d,
-                  kappa=cfg.kappa_for(int(dims[d]), n_dev), block_p=block_p)
+                  kappa=cfg.kappa_for(int(dims[d]), n_dev), block_p=block_p,
+                  schedule=cfg.schedule)
         for d in range(len(dims))
     ]
     return FlycooTensor(tuple(int(x) for x in dims), indices, values, plans)

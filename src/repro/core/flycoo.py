@@ -5,9 +5,12 @@ A tensor element is the tuple ``<alpha_i, beta_i, val_i>`` (paper Sec. 3.5):
 ``alpha_i`` = per-mode remap ids (b_0..b_{N-1}) — the element's physical slot
 in the mode-d kernel layout.
 
-The mode-d *kernel layout* is rectangular (see ``partition.ModePlan``):
-``kappa_d`` partitions x ``blocks_pp_d * P`` slots each. Pad slots hold
-``val = 0`` and ``lrow = -1`` so they contribute nothing (DESIGN.md Sec. 2).
+The mode-d *kernel layout* is block-scheduled (see ``partition.ModePlan``):
+``nblocks_d`` blocks of ``P`` slots laid out partition-major, with the
+``block_part`` descriptor naming each block's owning partition. The default
+``compact`` schedule emits only real blocks; ``rect`` pads every partition
+to the max partition's block count (the comparison baseline). Pad slots
+hold ``val = 0`` and ``lrow = -1`` so they contribute nothing.
 
 Per-slot arrays in layout d:
   val   (S_d,)    f32    nonzero value (0 in pads)
@@ -20,6 +23,22 @@ Per-slot arrays in layout d:
 ``dst`` is what makes remapping "dynamic": the mode-d pass scatters its own
 elements into the mode-(d+1) layout while computing mode d, exactly the
 paper's Alg. 3 (unique remap ids => conflict-free scatter, Observation 1).
+
+In-block factor-row dedup
+-------------------------
+The fused Pallas pipeline DMAs input-factor rows into VMEM per block; on
+Zipf-heavy tensors the same hot row recurs many times within one block, so
+per-slot copies re-fetch it up to ``P`` times. :meth:`FlycooTensor.
+dedup_tables` sorts each block's factor-row list host-side and emits
+
+  uidx  (N-1, S_d)       per block, the ``U <= P`` *unique* rows, compacted
+                         to the block's first slots (rest zero-padded);
+  upos  (S_d, N-1)       per slot, the local stage position of its row
+                         among the block's uniques (0 for pad slots);
+  nuniq (N-1, nblocks)   per block, the unique-row count ``U``,
+
+so the kernel issues ``U`` row DMAs instead of ``P`` and the EC body
+gathers its Hadamard operands through ``upos``.
 """
 from __future__ import annotations
 
@@ -29,7 +48,37 @@ from typing import Sequence
 
 import numpy as np
 
-from .partition import ModePlan, plan_mode
+from .partition import DEFAULT_SCHEDULE, ModePlan, plan_mode
+
+_ROW_SENTINEL = np.iinfo(np.int64).max  # pad-slot marker; sorts last
+
+
+def dedup_tables_from_rows(rows: np.ndarray, nblocks: int, block_p: int):
+    """Build (uidx, upos, nuniq) for one factor's per-slot row list.
+
+    ``rows`` is ``(S,)`` int64 with ``_ROW_SENTINEL`` marking pad slots;
+    ``S == nblocks * block_p``. Vectorized over blocks (no per-block Python
+    loop): sort each block's rows, mark firsts, compact the uniques to the
+    block's front, and record every slot's position among them.
+    """
+    s = nblocks * block_p
+    assert rows.shape == (s,), (rows.shape, nblocks, block_p)
+    rb = rows.reshape(nblocks, block_p)
+    order = np.argsort(rb, axis=1, kind="stable")
+    srt = np.take_along_axis(rb, order, axis=1)
+    isnew = np.ones((nblocks, block_p), dtype=bool)
+    isnew[:, 1:] = srt[:, 1:] != srt[:, :-1]
+    isnew &= srt != _ROW_SENTINEL          # sentinels are not unique rows
+    upos_sorted = np.maximum(np.cumsum(isnew, axis=1) - 1, 0)
+    upos = np.zeros((nblocks, block_p), dtype=np.int64)
+    np.put_along_axis(upos, order, upos_sorted, axis=1)
+    upos[rb == _ROW_SENTINEL] = 0          # pad slots -> stage row 0
+    nuniq = isnew.sum(axis=1).astype(np.int32)
+    uidx = np.zeros((nblocks, block_p), dtype=np.int64)
+    bix, six = np.nonzero(isnew)
+    uidx[bix, upos_sorted[bix, six]] = srt[bix, six]
+    return (uidx.reshape(s).astype(np.int32),
+            upos.reshape(s).astype(np.int32), nuniq)
 
 
 @dataclasses.dataclass
@@ -73,6 +122,47 @@ class FlycooTensor:
         dst[slots] = nxt.slot_of_elem.astype(np.int32)
         return {"val": val, "idx": idx, "lrow": lrow, "dst": dst}
 
+    def _slot_rows(self, d: int, w: int) -> np.ndarray:
+        """(S_d,) mode-``w`` factor row per mode-``d`` slot (sentinel pads)."""
+        plan = self.plans[d]
+        rows = np.full(plan.padded_nnz, _ROW_SENTINEL, dtype=np.int64)
+        rows[plan.slot_of_elem] = self.indices[:, w]
+        return rows
+
+    def dedup_tables(self, d: int):
+        """Per-block factor-row dedup tables for the mode-``d`` layout.
+
+        Returns ``(uidx (N-1, S_d) i32, upos (S_d, N-1) i32,
+        nuniq (N-1, nblocks) i32)`` over the input modes ``w != d`` in
+        ascending mode order (matching the kernels' factor operand order).
+        """
+        plan = self.plans[d]
+        in_modes = [w for w in range(self.nmodes) if w != d]
+        uidx, upos, nuniq = [], [], []
+        for w in in_modes:
+            u, p, n = dedup_tables_from_rows(self._slot_rows(d, w),
+                                             plan.nblocks, plan.block_p)
+            uidx.append(u)
+            upos.append(p)
+            nuniq.append(n)
+        return (np.stack(uidx), np.stack(upos, axis=1), np.stack(nuniq))
+
+    def dma_row_model(self, d: int) -> dict:
+        """Modeled factor-row DMA copies for the mode-``d`` fused gather:
+        per-slot copies (``nblocks * P`` per input factor — what the
+        non-dedup pipeline issues) vs per-block-unique copies
+        (``sum nuniq``). The ratio is the in-block hot-row re-fetch factor
+        the dedup stage removes."""
+        plan = self.plans[d]
+        nm1 = self.nmodes - 1
+        _, _, nuniq = self.dedup_tables(d)
+        per_slot = plan.nblocks * plan.block_p * nm1
+        return {
+            "per_slot_rows": int(per_slot),
+            "dedup_rows": int(nuniq.sum()),
+            "dedup_reduction_x": float(per_slot / max(int(nuniq.sum()), 1)),
+        }
+
     # -------------------------------------------------------------- metadata
     def memory_bits_per_element(self, float_bits: int = 32) -> float:
         """Paper Sec. 3.5.1: N*log2(|X|) + sum_h log2(I_h) + delta_float."""
@@ -94,6 +184,7 @@ def build_flycoo(
     kappa: int | None = None,
     rows_pp: int | None = None,
     block_p: int = 128,
+    schedule: str = DEFAULT_SCHEDULE,
 ) -> FlycooTensor:
     """Preprocess a COO tensor into FLYCOO-TPU format (paper Sec. 5.7 cost:
     O(nnz log nnz) per mode, touching only nonzeros — never the index space).
@@ -108,7 +199,7 @@ def build_flycoo(
         assert indices[:, d].max(initial=0) < dims[d]
     plans = [
         plan_mode(indices[:, d], int(dims[d]), d, kappa=kappa,
-                  rows_pp=rows_pp, block_p=block_p)
+                  rows_pp=rows_pp, block_p=block_p, schedule=schedule)
         for d in range(n)
     ]
     return FlycooTensor(tuple(int(x) for x in dims), indices, values, plans)

@@ -61,17 +61,22 @@ def mttkrp_ref(indices, values, factors, mode: int, dim: int):
 # these; the registry is the source of truth).
 # --------------------------------------------------------------------------
 def _ec_xla(layout, factors, mode: int, *, rows_pp, blocks_pp, block_p,
-            kappa):
+            kappa, schedule: str = "rect", nblocks: int = -1):
+    """Compact-schedule layouts must carry the ``bpart`` descriptor in
+    ``layout`` (pass ``schedule="compact"``/``nblocks`` from the plan)."""
     plan = ModeStatic(kappa=kappa, rows_pp=rows_pp, blocks_pp=blocks_pp,
-                      block_p=block_p, dim=0)
+                      block_p=block_p, dim=0, nblocks=nblocks,
+                      schedule=schedule)
     return get_backend("xla")(layout, tuple(factors), mode, plan=plan,
                               config=ExecutionConfig())
 
 
 def _ec_pallas(layout, factors, mode: int, interpret: bool, *, kappa,
-               rows_pp, blocks_pp, block_p):
+               rows_pp, blocks_pp, block_p, schedule: str = "rect",
+               nblocks: int = -1):
     plan = ModeStatic(kappa=kappa, rows_pp=rows_pp, blocks_pp=blocks_pp,
-                      block_p=block_p, dim=0)
+                      block_p=block_p, dim=0, nblocks=nblocks,
+                      schedule=schedule)
     config = ExecutionConfig(backend="pallas", interpret=interpret)
     return get_backend("pallas")(layout, tuple(factors), mode, plan=plan,
                                  config=config)
@@ -80,24 +85,45 @@ def _ec_pallas(layout, factors, mode: int, interpret: bool, *, kappa,
 @functools.partial(
     jax.jit,
     static_argnames=("mode", "rows_pp", "blocks_pp", "block_p", "kappa",
-                     "next_size", "backend", "interpret"),
+                     "next_size", "backend", "interpret", "schedule",
+                     "nblocks"),
 )
 def mode_step(layout, factors, row_relabel_d, *, mode: int, rows_pp: int,
               blocks_pp: int, block_p: int, kappa: int, next_size: int,
-              backend: str = "xla", interpret: bool = False):
+              backend: str = "xla", interpret: bool = False,
+              schedule: str = "rect", nblocks: int = -1):
     """One iteration of Alg. 5's mode loop: EC (Alg. 2) + remap (Alg. 3).
 
     Returns (out_rel, next_layout). ``out_rel`` is the mode-d MTTKRP result
     in relabeled row space; caller maps back with ``row_relabel``. Kept for
-    per-mode benchmarking; the scanned path is ``engine.all_modes``.
+    per-mode benchmarking; the scanned path is ``engine.all_modes``. Under
+    ``schedule="compact"`` pass ``nblocks`` and put the plan's ``bpart``
+    descriptor in ``layout``.
     """
     nmodes = layout["idx"].shape[1]
     plan = ModeStatic(kappa=kappa, rows_pp=rows_pp, blocks_pp=blocks_pp,
-                      block_p=block_p, dim=int(row_relabel_d.shape[0]))
+                      block_p=block_p, dim=int(row_relabel_d.shape[0]),
+                      nblocks=nblocks, schedule=schedule)
+    s = layout["val"].shape[0]
+    if s != plan.padded_nnz:
+        # The usual cause: a compact-schedule layout (build_flycoo's
+        # default) driven with the rect-default kwargs. A balanced compact
+        # layout coincides with the rect one slot-for-slot, so equal sizes
+        # are always safe; unequal means wrong partition arithmetic ahead.
+        raise ValueError(
+            f"layout has {s} slots but the {schedule!r} schedule expects "
+            f"{plan.padded_nnz}; for compact-schedule plans pass "
+            "schedule='compact', nblocks=plan.nblocks and include "
+            "layout['bpart'] (= plan.block_part)")
+    if schedule == "compact" and layout.get("bpart") is None:
+        raise KeyError(
+            "compact-schedule layout needs the 'bpart' block->partition "
+            "descriptor (plan.block_part)")
     config = ExecutionConfig(backend=backend, interpret=interpret)
     alive = layout["alpha"][:, mode] >= 0
     lrow = compute_lrow(layout["idx"][:, mode], row_relabel_d, rows_pp, alive)
-    ec_layout = {"val": layout["val"], "idx": layout["idx"], "lrow": lrow}
+    ec_layout = {"val": layout["val"], "idx": layout["idx"], "lrow": lrow,
+                 "bpart": layout.get("bpart")}
     out_rel = get_backend(config)(ec_layout, tuple(factors), mode, plan=plan,
                                   config=config)
 

@@ -16,7 +16,12 @@ Public surface:
                                    the zero-HBM-intermediate pipeline: the
                                    factor gather runs inside the kernel grid
                                    and the Alg. 3 remap scatter is fused
-                                   into the same pass (``fuse_remap`` knob)
+                                   into the same pass (``fuse_remap`` knob).
+                                   Every backend serves both block
+                                   schedules: ``schedule="compact"`` (the
+                                   default — descriptor-driven grid of real
+                                   blocks + in-block factor-row dedup) and
+                                   ``"rect"`` (the padded baseline)
   dist (DistConfig / shard_state / dist_mttkrp / dist_all_modes)
                                    multi-device subsystem: EngineState sharded
                                    under shard_map, remap exchanged via a
@@ -29,9 +34,10 @@ Migration from the deprecated stateful executor:
   exe.all_modes(factors)           -> outs, s = engine.all_modes(s, factors)
   exe.layout / exe.current_mode    -> s.val / s.idx / s.alpha / s.mode
 """
-from .config import (ExecutionConfig, KAPPA_POLICIES,
+from .config import (ExecutionConfig, KAPPA_POLICIES, SCHEDULES,
                      platform_default_interpret)
-from .state import EngineState, ModeStatic, mode_static_from_plan
+from .state import (EngineState, ModeSched, ModeStatic,
+                    mode_static_from_plan)
 from .backends import (BACKENDS, register_backend, get_backend,
                        compute_lrow)
 from .api import (init, mttkrp, all_modes, scan_jaxpr, reset_counters,
@@ -41,8 +47,8 @@ from .dist import (DistConfig, DistState, ExchangeSchedule, shard_state,
                    dist_mttkrp, dist_all_modes)
 
 __all__ = [
-    "ExecutionConfig", "KAPPA_POLICIES", "platform_default_interpret",
-    "EngineState", "ModeStatic",
+    "ExecutionConfig", "KAPPA_POLICIES", "SCHEDULES",
+    "platform_default_interpret", "EngineState", "ModeSched", "ModeStatic",
     "mode_static_from_plan", "BACKENDS", "register_backend", "get_backend",
     "compute_lrow", "init", "mttkrp", "all_modes", "scan_jaxpr",
     "reset_counters", "TRACE_COUNTS", "DISPATCH_COUNTS", "FoldFn",

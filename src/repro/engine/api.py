@@ -31,7 +31,8 @@ from jax import lax
 
 from .backends import compute_lrow, get_backend
 from .config import ExecutionConfig
-from .state import EngineState, ModeStatic, mode_static_from_plan
+from .state import (EngineState, ModeSched, ModeStatic,
+                    mode_static_from_plan)
 
 # Fold callback: fold(mode, out_d, factors, carry) -> (factors, carry),
 # called inside the traced scan with *static* mode and out_d of shape
@@ -89,11 +90,29 @@ def init(tensor, config: ExecutionConfig | None = None,
         idx=jnp.asarray(idx),
         alpha=jnp.asarray(alpha),
         relabel=tuple(jnp.asarray(p.row_relabel) for p in tensor.plans),
+        sched=tuple(_mode_sched(tensor, d, config) for d in range(n)),
         mode=int(start_mode),
         dims=tensor.dims,
         statics=statics,
         config=config,
     )
+
+
+def _mode_sched(tensor, d: int, config: ExecutionConfig) -> ModeSched:
+    """Device-resident per-mode schedule tables: the block->partition
+    descriptor always; the in-block factor-row dedup tables only when the
+    configured backend consumes them (``needs_dedup`` registry attribute —
+    the fused Pallas pipeline) under the compact schedule, so xla/ref/
+    pallas states skip the per-block sort and the device-resident
+    ``(N-1, S_d)`` tables entirely."""
+    plan = tensor.plans[d]
+    bpart = jnp.asarray(plan.block_part)
+    if plan.schedule != "compact" or \
+            not getattr(get_backend(config), "needs_dedup", False):
+        return ModeSched(bpart=bpart)
+    uidx, upos, nuniq = tensor.dedup_tables(d)
+    return ModeSched(bpart=bpart, uidx=jnp.asarray(uidx),
+                     upos=jnp.asarray(upos), nuniq=jnp.asarray(nuniq))
 
 
 def _as_flycoo(tensor, config: ExecutionConfig):
@@ -105,7 +124,8 @@ def _as_flycoo(tensor, config: ExecutionConfig):
     kappa = config.kappa if config.kappa_policy == "fixed" else None
     return build_flycoo(indices, values, dims, kappa=kappa,
                         rows_pp=config.resolve_rows_pp(),
-                        block_p=config.block_p)
+                        block_p=config.block_p,
+                        schedule=config.schedule)
 
 
 # --------------------------------------------------------------------------
@@ -116,11 +136,12 @@ def _mode_branch(d: int, *, statics: Sequence[ModeStatic], smax: int,
                  pad_out_to: int | None):
     """Build the traced step for (static) mode ``d``.
 
-    Returns a function (layout3, relabels, factors, carry) ->
+    Returns a function (layout3, relabels, sched, factors, carry) ->
     ((nval, nidx, nalpha), out, factors, carry) where ``layout3`` is the
-    S_max-padded (val, idx, alpha) triple and ``out`` is the mode-``d``
-    MTTKRP in user row space, zero-padded to ``pad_out_to`` rows when a
-    uniform stacked shape is needed (the scan path).
+    S_max-padded (val, idx, alpha) triple, ``sched`` the per-mode schedule
+    tables, and ``out`` is the mode-``d`` MTTKRP in user row space,
+    zero-padded to ``pad_out_to`` rows when a uniform stacked shape is
+    needed (the scan path).
     """
     plan = statics[d]
     n = len(statics)
@@ -133,12 +154,13 @@ def _mode_branch(d: int, *, statics: Sequence[ModeStatic], smax: int,
     fused = (getattr(backend, "fused_remap", None)
              if config.fuse_remap else None)
 
-    def step(layout3, relabels, factors, carry):
+    def step(layout3, relabels, sched, factors, carry):
         val, idx, alpha = layout3
         v, ix, al = val[:sd], idx[:sd], alpha[:sd]
         alive = al[:, d] >= 0
         lrow = compute_lrow(ix[:, d], relabels[d], plan.rows_pp, alive)
-        layout = {"val": v, "idx": ix, "alpha": al, "lrow": lrow}
+        layout = {"val": v, "idx": ix, "alpha": al, "lrow": lrow,
+                  **sched[d]._asdict()}
         if fused is not None:
             # One Pallas pass: EC + remap; slots beyond S_{d+1} stay empty
             # (the kernel initializes the next layout to the pad pattern).
@@ -189,16 +211,17 @@ def mttkrp(state: EngineState, factors: Sequence[jax.Array],
                             config=state.config, fold=None,
                             pad_out_to=None)
 
-        def run(layout3, relabels, factors):
+        def run(layout3, relabels, sched, factors):
             TRACE_COUNTS["mttkrp"] += 1  # trace-time side effect
-            nl, out, _, _ = step(layout3, relabels, factors, None)
+            nl, out, _, _ = step(layout3, relabels, sched, factors, None)
             return nl, out
 
         donate = (0,) if state.config.resolve_donate() else ()
         fn = _JIT_CACHE[key] = jax.jit(run, donate_argnums=donate)
     DISPATCH_COUNTS["mttkrp"] += 1
     (nval, nidx, nalpha), out = fn(
-        (state.val, state.idx, state.alpha), state.relabel, tuple(factors))
+        (state.val, state.idx, state.alpha), state.relabel, state.sched,
+        tuple(factors))
     nxt = (d + 1) % state.nmodes
     return out, state.replace(val=nval, idx=nidx, alpha=nalpha, mode=nxt)
 
@@ -222,14 +245,14 @@ def _build_scan(state: EngineState, fold: FoldFn | None):
         for d in range(n)
     ]
 
-    def run(layout3, relabels, factors, carry):
+    def run(layout3, relabels, sched, factors, carry):
         TRACE_COUNTS["all_modes"] += 1  # trace-time side effect
 
         def body(sc, mode_t):
             layout3, factors, carry = sc
             nl, out, factors, carry = lax.switch(
                 mode_t,
-                [lambda l3, f, c, b=b: b(l3, relabels, f, c)
+                [lambda l3, f, c, b=b: b(l3, relabels, sched, f, c)
                  for b in branches],
                 layout3, factors, carry)
             return (nl, factors, carry), out
@@ -269,8 +292,8 @@ def all_modes(state: EngineState, factors: Sequence[jax.Array], *,
                                        donate_argnums=donate)
     DISPATCH_COUNTS["all_modes"] += 1
     layout3, outs, out_factors, out_carry = fn(
-        (state.val, state.idx, state.alpha), state.relabel, tuple(factors),
-        carry)
+        (state.val, state.idx, state.alpha), state.relabel, state.sched,
+        tuple(factors), carry)
     nval, nidx, nalpha = layout3
     next_state = state.replace(val=nval, idx=nidx, alpha=nalpha)
     if fold is None:
@@ -282,8 +305,8 @@ def scan_jaxpr(state: EngineState, factors: Sequence[jax.Array],
                fold: FoldFn | None = None, carry=None):
     """Jaxpr of the all-modes program (tests assert it is one scan)."""
     return jax.make_jaxpr(_build_scan(state, fold))(
-        (state.val, state.idx, state.alpha), state.relabel, tuple(factors),
-        carry)
+        (state.val, state.idx, state.alpha), state.relabel, state.sched,
+        tuple(factors), carry)
 
 
 __all__ = ["init", "mttkrp", "all_modes", "scan_jaxpr", "reset_counters",

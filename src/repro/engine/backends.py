@@ -11,7 +11,12 @@ where ``layout`` holds the mode-``mode`` kernel layout slices
 (``val (S_d,)``, ``idx (S_d, N)``, ``lrow (S_d,)``, and — when the caller
 has it resident, as the engine scan does — ``alpha (S_d, N)``) and the
 result lives in relabeled row space (caller un-relabels with the mode's
-relabel table). The same contract serves the single-device scan
+relabel table). Under the ``compact`` block schedule (``plan.schedule ==
+"compact"``) the layout additionally carries the per-mode schedule tables
+from ``EngineState.sched``: the ``bpart (nblocks,)`` block->partition
+descriptor (required — slot->partition is no longer a fixed stride) and
+the in-block dedup tables ``uidx``/``upos``/``nuniq`` consumed by the
+fused Pallas pipelines. The same contract serves the single-device scan
 (``engine.api``) and the per-device shards under ``shard_map``
 (``engine.dist``).
 
@@ -26,19 +31,30 @@ instead of issuing three separate full-``S_max`` XLA scatters.
 
 Registered backends:
   ============  =========================================================
-  xla           fused segment-sum over the relabeled row space (default)
+  xla           fused segment-sum over the relabeled row space (default);
+                segment ids come from the block->partition descriptor
+                under the compact schedule, a fixed stride under rect
   pallas        one-hot-MXU Pallas kernel fed by an XLA-materialized
                 ``(S, N-1, R)`` HBM gather — the fusion comparison
-                baseline (interpret off-TPU)
+                baseline (interpret off-TPU). Compact schedule: the 1-D
+                descriptor-driven grid (``mttkrp_fused_compact``)
   pallas_fused  zero-HBM-intermediate Pallas pipeline: factor rows are
                 gathered *inside* the kernel grid (scalar-prefetched
                 indices + double-buffered ANY->VMEM row DMA) and the
                 Alg. 3 remap scatter is emitted by the same pass via
-                ``fused_remap``
+                ``fused_remap``. Compact schedule: the gather is
+                *dedup-aware* — each block DMAs only its ``U <= P``
+                unique factor rows (plan-sorted ``uidx``/``nuniq``) and
+                the EC body routes slots through ``upos`` with a one-hot
+                MXU stage select
   ref           unfused oracle-shaped path: materialize the (S, R)
                 Hadamard partials, then segment-sum — the baseline the
                 paper's fusion argument (Fig. 7) is measured against
   ============  =========================================================
+
+Every backend serves both block schedules (``plan.schedule``): the
+``compact`` grid walks only real blocks (a ``(nblocks,)`` descriptor
+names each block's partition), ``rect`` is the padded baseline.
 """
 from __future__ import annotations
 
@@ -109,10 +125,20 @@ def _gather_partials(layout, factors, mode: int, accum_dtype):
 
 
 def _segment_ids(layout, plan: ModeStatic):
-    """Global relabeled row per slot; pads (lrow == -1) -> dump row 0."""
-    stride = plan.blocks_pp * plan.block_p
+    """Global relabeled row per slot; pads (lrow == -1) -> dump row 0.
+
+    The owning partition is a fixed slot stride under the ``rect``
+    schedule; under ``compact`` it is the block->partition descriptor
+    lookup (the layout must carry ``bpart``)."""
     slot = jnp.arange(layout["val"].shape[0], dtype=jnp.int32)
-    part = slot // stride
+    if plan.schedule == "compact":
+        if layout.get("bpart") is None:
+            raise KeyError(
+                "compact-schedule layout needs the 'bpart' block->partition "
+                "descriptor (see EngineState.sched)")
+        part = jnp.take(layout["bpart"], slot // plan.block_p, axis=0)
+    else:
+        part = slot // (plan.blocks_pp * plan.block_p)
     lrow = layout["lrow"]
     return jnp.where(lrow < 0, 0, part * plan.rows_pp + lrow)
 
@@ -154,6 +180,18 @@ def ec_pallas(layout, factors, mode: int, *, plan: ModeStatic,
                   fill_value=0.0)
          for w, f in enumerate(factors) if w != mode],
         axis=1)  # (S, N-1, R)
+    if plan.schedule == "compact":
+        return kops.mttkrp_fused_compact(
+            gathered,
+            layout["val"],
+            layout["lrow"],
+            layout["bpart"],
+            kappa=plan.kappa,
+            rows_pp=plan.rows_pp,
+            nblocks=plan.nblocks,
+            block_p=plan.block_p,
+            interpret=config.resolve_interpret(),
+        )
     return kops.mttkrp_fused(
         gathered,
         layout["val"],
@@ -181,12 +219,28 @@ def ec_pallas_fused(layout, factors, mode: int, *, plan: ModeStatic,
     """Zero-HBM-intermediate Pallas pipeline: the factor-row gather happens
     inside the kernel grid (scalar-prefetched indices, double-buffered
     ANY->VMEM row DMA), so no ``(S, N-1, R)`` intermediate is ever
-    materialized. This entry is the plain-EC contract used under
-    ``shard_map`` too; the single-device scan step upgrades to
-    ``fused_remap`` below."""
+    materialized. Under the compact schedule the gather is dedup-aware:
+    each block DMAs only its unique factor rows. This entry is the
+    plain-EC contract used under ``shard_map`` too; the single-device scan
+    step upgrades to ``fused_remap`` below."""
     from repro.kernels import ops as kops
 
     inputs = tuple(f for w, f in enumerate(factors) if w != mode)
+    if plan.schedule == "compact":
+        return kops.mttkrp_fused_gather_compact(
+            layout["val"],
+            layout["lrow"],
+            layout["upos"],
+            layout["bpart"],
+            layout["uidx"],
+            layout["nuniq"],
+            inputs,
+            kappa=plan.kappa,
+            rows_pp=plan.rows_pp,
+            nblocks=plan.nblocks,
+            block_p=plan.block_p,
+            interpret=config.resolve_interpret(),
+        )
     return kops.mttkrp_fused_gather(
         layout["val"],
         layout["lrow"],
@@ -208,6 +262,26 @@ def _pallas_fused_remap(layout, factors, mode: int, *, plan: ModeStatic,
     from repro.kernels import ops as kops
 
     inputs = tuple(f for w, f in enumerate(factors) if w != mode)
+    if plan.schedule == "compact":
+        out_rel, nval, nidx, nalpha = kops.mttkrp_fused_remap_compact(
+            layout["val"],
+            layout["idx"],
+            layout["alpha"],
+            layout["lrow"],
+            layout["upos"],
+            layout["bpart"],
+            layout["uidx"],
+            layout["nuniq"],
+            inputs,
+            kappa=plan.kappa,
+            rows_pp=plan.rows_pp,
+            nblocks=plan.nblocks,
+            block_p=plan.block_p,
+            smax=smax,
+            next_mode=next_mode,
+            interpret=config.resolve_interpret(),
+        )
+        return out_rel, (nval, nidx, nalpha)
     out_rel, nval, nidx, nalpha = kops.mttkrp_fused_remap(
         layout["val"],
         layout["idx"],
@@ -227,6 +301,9 @@ def _pallas_fused_remap(layout, factors, mode: int, *, plan: ModeStatic,
 
 
 ec_pallas_fused.fused_remap = _pallas_fused_remap
+# engine.init builds the per-mode dedup tables (EngineState.sched) only
+# for backends that declare they consume them.
+ec_pallas_fused.needs_dedup = True
 
 
 __all__ = ["BACKENDS", "register_backend", "get_backend", "compute_lrow",

@@ -17,6 +17,11 @@ import jax
 # tile fits VMEM (the DESIGN.md default); "fixed" uses ``kappa`` verbatim.
 KAPPA_POLICIES = ("vmem", "fixed")
 
+# Block schedules (see ``repro.core.partition``): "compact" emits only real
+# blocks + a block->partition descriptor; "rect" pads every partition to
+# the max partition's block count (the comparison baseline).
+SCHEDULES = ("compact", "rect")
+
 
 def platform_default_interpret() -> bool:
     """Single source of the Pallas interpret-mode platform default: run the
@@ -57,6 +62,11 @@ class ExecutionConfig:
       rank_hint: rank R used to convert the VMEM budget into rows (the
         paper's default R=32); only consulted when ``vmem_budget_bytes``
         is set.
+      schedule: block schedule used when ``engine.init`` builds plans from
+        raw COO input — ``"compact"`` (load-balanced grid of real blocks,
+        the default) or ``"rect"`` (rectangular comparison baseline). A
+        prebuilt ``FlycooTensor``'s plans carry their own schedule and
+        take precedence.
     """
 
     backend: str = "xla"
@@ -70,11 +80,15 @@ class ExecutionConfig:
     fuse_remap: bool = True
     vmem_budget_bytes: int | None = None
     rank_hint: int = 32
+    schedule: str = "compact"
 
     def __post_init__(self):
         if self.kappa_policy not in KAPPA_POLICIES:
             raise ValueError(
                 f"kappa_policy {self.kappa_policy!r} not in {KAPPA_POLICIES}")
+        if self.schedule not in SCHEDULES:
+            raise ValueError(
+                f"schedule {self.schedule!r} not in {SCHEDULES}")
         if self.kappa_policy == "fixed" and self.kappa is None:
             raise ValueError("kappa_policy='fixed' requires kappa")
         if self.vmem_budget_bytes is not None and self.vmem_budget_bytes < 1:
@@ -140,4 +154,5 @@ class ExecutionConfig:
         return min(kappa, (dim // n_dev) * n_dev)
 
 
-__all__ = ["ExecutionConfig", "KAPPA_POLICIES", "platform_default_interpret"]
+__all__ = ["ExecutionConfig", "KAPPA_POLICIES", "SCHEDULES",
+           "platform_default_interpret"]

@@ -23,10 +23,15 @@ Sharded layout numbering
 ------------------------
 A :class:`DistState` stores the layout in *device-major* slot numbering:
 device ``k`` owns global slots ``[k * S_loc, (k+1) * S_loc)`` where
-``S_loc = max_d S_d / n_dev``, and within a device the mode-``d`` layout
-occupies the first ``S_d / n_dev`` local slots (its ``kappa_d / n_dev``
-partitions, contiguous). This requires every mode's ``kappa`` to be a
-multiple of ``n_dev`` — build tensors with
+``S_loc = max_d S_d_loc``, and within a device the mode-``d`` layout
+occupies the first ``S_d_loc`` local slots — its ``kappa_d / n_dev``
+contiguous partitions' blocks, laid out by the mode's block schedule.
+Under the ``rect`` schedule ``S_d_loc = S_d / n_dev`` exactly; under
+``compact`` each device's real block count differs (partitions are
+nnz-balanced, not block-identical), so ``S_d_loc`` is the max device's
+block count and shorter devices carry trailing all-pad blocks (dead
+slots, descriptor repeating the last real partition). This requires every
+mode's ``kappa`` to be a multiple of ``n_dev`` — build tensors with
 :func:`repro.core.distributed.build_sharded_flycoo` or pick partition
 counts via :meth:`ExecutionConfig.kappa_for`.
 
@@ -57,7 +62,7 @@ from repro.sharding import ShardingCtx
 from .api import _JIT_CACHE, DISPATCH_COUNTS, TRACE_COUNTS, FoldFn
 from .backends import compute_lrow, get_backend
 from .config import ExecutionConfig
-from .state import EngineState, ModeStatic
+from .state import EngineState, ModeSched, ModeStatic
 
 try:  # jax >= 0.6 spells it jax.shard_map
     from jax import shard_map as _shard_map
@@ -126,16 +131,13 @@ def row_bytes(nmodes: int) -> int:
     return 4 * (1 + 2 * nmodes)
 
 
-def _schedule_from_slots(slots_by_mode: Sequence[np.ndarray],
-                         sizes: Sequence[int], n_dev: int,
-                         pad_hop: int) -> ExchangeSchedule:
-    """Build the schedule from each element's slot in every mode layout."""
-    n = len(slots_by_mode)
-    devs = [np.asarray(slots_by_mode[d]) // (sizes[d] // n_dev)
-            for d in range(n)]
+def _schedule_from_devs(devs_by_mode: Sequence[np.ndarray], n_dev: int,
+                        pad_hop: int) -> ExchangeSchedule:
+    """Build the schedule from each element's owning device in every mode."""
+    n = len(devs_by_mode)
     hops = []
     for d in range(n):
-        src, dst = devs[d], devs[(d + 1) % n]
+        src, dst = devs_by_mode[d], devs_by_mode[(d + 1) % n]
         counts = np.bincount(src * n_dev + dst,
                              minlength=n_dev * n_dev).reshape(n_dev, n_dev)
         per_hop = []
@@ -148,18 +150,95 @@ def _schedule_from_slots(slots_by_mode: Sequence[np.ndarray],
     return ExchangeSchedule(n_dev=n_dev, hops=tuple(hops))
 
 
+def element_devices(plan, n_dev: int) -> np.ndarray:
+    """(nnz,) owning device per element for a ``ModePlan`` sharded over
+    ``n_dev`` devices: device ``k`` owns partitions
+    ``[k*kappa/n_dev, (k+1)*kappa/n_dev)``. Schedule-agnostic — the
+    partition comes from the block->partition descriptor, which under
+    ``rect`` degenerates to the fixed slot stride."""
+    if plan.kappa % n_dev != 0:
+        raise ValueError(
+            f"mode-{plan.mode} kappa {plan.kappa} not divisible by "
+            f"n_dev {n_dev}; build with kappa_for / build_sharded_flycoo")
+    part = plan.block_part[plan.slot_of_elem // plan.block_p]
+    return (part // (plan.kappa // n_dev)).astype(np.int64)
+
+
 def schedule_for_plans(plans, n_dev: int,
                        pad_hop: int = 8) -> ExchangeSchedule:
     """Exchange schedule for a tensor's ``ModePlan`` list (host-only; needs
     no devices — used by benchmarks to model traffic at any scale)."""
-    for p in plans:
-        if p.kappa % n_dev != 0:
-            raise ValueError(
-                f"mode-{p.mode} kappa {p.kappa} not divisible by "
-                f"n_dev {n_dev}; build with kappa_for / build_sharded_flycoo")
-    return _schedule_from_slots([p.slot_of_elem for p in plans],
-                                [p.padded_nnz for p in plans], n_dev,
-                                pad_hop)
+    return _schedule_from_devs([element_devices(p, n_dev) for p in plans],
+                               n_dev, pad_hop)
+
+
+# --------------------------------------------------------------------------
+# Device-major block geometry (host-side, schedule-aware).
+# --------------------------------------------------------------------------
+def _block_geometry(static: ModeStatic, bpart: np.ndarray, n_dev: int):
+    """Per-mode block geometry under device-major sharding.
+
+    Returns ``(kappa_loc, blocks_per_dev, dev_first_block, nblocks_loc)``:
+    device ``k`` owns partitions ``[k*kappa_loc, (k+1)*kappa_loc)`` whose
+    blocks are contiguous (partition-major layout) starting at global
+    block ``dev_first_block[k]``; every device's local layout is padded to
+    ``nblocks_loc = max blocks_per_dev`` blocks.
+    """
+    kappa_loc = static.kappa // n_dev
+    part_blocks = np.bincount(bpart, minlength=static.kappa)
+    blocks_per_dev = part_blocks.reshape(n_dev, kappa_loc).sum(axis=1)
+    dev_first_block = np.concatenate([[0], np.cumsum(blocks_per_dev)])[:-1]
+    return kappa_loc, blocks_per_dev, dev_first_block, int(
+        blocks_per_dev.max())
+
+
+def _local_static(static: ModeStatic, nblocks_loc: int,
+                  n_dev: int) -> ModeStatic:
+    """The per-device ``ModeStatic`` (kappa_loc partitions, padded-uniform
+    local block count)."""
+    return ModeStatic(kappa=static.kappa // n_dev, rows_pp=static.rows_pp,
+                      blocks_pp=static.blocks_pp, block_p=static.block_p,
+                      dim=static.dim, nblocks=nblocks_loc,
+                      schedule=static.schedule)
+
+
+def _local_sched(ms: ModeSched, static: ModeStatic, geom,
+                 n_dev: int) -> ModeSched:
+    """Device-major re-layout of one mode's schedule tables: each device's
+    block run is sliced out and padded to the uniform local block count.
+    Pad blocks repeat the last real partition id (so the descriptor stays
+    nondecreasing and never re-triggers a tile init) and carry zeroed
+    dedup tables (``nuniq = 0`` -> the kernel issues no DMAs for them)."""
+    kappa_loc, blocks_per_dev, dev_first_block, nblocks_loc = geom
+    p = static.block_p
+    sloc = nblocks_loc * p
+    bp = np.asarray(ms.bpart)
+    lbp = np.empty((n_dev, nblocks_loc), dtype=np.int32)
+    for k in range(n_dev):
+        nb = int(blocks_per_dev[k])
+        seg = bp[dev_first_block[k]:dev_first_block[k] + nb] - k * kappa_loc
+        lbp[k, :nb] = seg
+        lbp[k, nb:] = seg[-1] if nb else kappa_loc - 1
+    out = {"bpart": jnp.asarray(lbp.reshape(-1))}
+    if ms.uidx is not None:
+        nm1 = ms.uidx.shape[0]
+        uidx = np.asarray(ms.uidx)
+        upos = np.asarray(ms.upos)
+        nuniq = np.asarray(ms.nuniq)
+        luidx = np.zeros((nm1, n_dev * sloc), dtype=np.int32)
+        lupos = np.zeros((n_dev * sloc, nm1), dtype=np.int32)
+        lnuniq = np.zeros((nm1, n_dev * nblocks_loc), dtype=np.int32)
+        for k in range(n_dev):
+            nb = int(blocks_per_dev[k])
+            g0 = int(dev_first_block[k])
+            luidx[:, k * sloc:k * sloc + nb * p] = \
+                uidx[:, g0 * p:(g0 + nb) * p]
+            lupos[k * sloc:k * sloc + nb * p] = upos[g0 * p:(g0 + nb) * p]
+            lnuniq[:, k * nblocks_loc:k * nblocks_loc + nb] = \
+                nuniq[:, g0:g0 + nb]
+        out.update(uidx=jnp.asarray(luidx), upos=jnp.asarray(lupos),
+                   nuniq=jnp.asarray(lnuniq))
+    return ModeSched(**out)
 
 
 def exchange_bytes(schedule: ExchangeSchedule, nmodes: int,
@@ -190,19 +269,25 @@ class DistState:
 
     Array leaves mirror :class:`~repro.engine.state.EngineState` but hold
     *global* arrays placed over the mesh: ``val (n_dev*S_loc,)``,
-    ``idx/alpha (n_dev*S_loc, N)`` sharded along the ``data`` axis, and the
-    replicated per-mode ``relabel`` tables. ``alpha`` entries are in the
+    ``idx/alpha (n_dev*S_loc, N)`` sharded along the ``data`` axis, the
+    replicated per-mode ``relabel`` tables, and the per-mode ``sched``
+    block-schedule tables in device-major layout (sharded so every device
+    holds its local descriptor/dedup slices). ``alpha`` entries are in the
     device-major dist numbering (see module docstring), so remap
     destinations encode both target device and target local slot.
+    ``lstatics`` holds each mode's *per-device* plan constants
+    (``kappa/n_dev`` partitions, padded-uniform local block count).
     """
 
     val: jax.Array
     idx: jax.Array
     alpha: jax.Array
     relabel: tuple[jax.Array, ...]
+    sched: tuple[ModeSched, ...]
     mode: int
     dims: tuple[int, ...]
     statics: tuple[ModeStatic, ...]
+    lstatics: tuple[ModeStatic, ...]
     config: ExecutionConfig
     dist: DistConfig
     n_dev: int
@@ -216,8 +301,8 @@ class DistState:
 
     @property
     def slocs(self) -> tuple[int, ...]:
-        """Per-mode local padded slot counts ``S_d / n_dev``."""
-        return tuple(s.padded_nnz // self.n_dev for s in self.statics)
+        """Per-mode local padded slot counts ``S_d_loc``."""
+        return tuple(s.padded_nnz for s in self.lstatics)
 
     @property
     def smax_loc(self) -> int:
@@ -229,25 +314,29 @@ class DistState:
         return max(self.dims)
 
     def aux_key(self):
-        return (self.mode, self.dims, self.statics, self.config, self.dist,
-                self.n_dev, self.schedule, self.mesh)
+        return (self.mode, self.dims, self.statics, self.lstatics,
+                self.config, self.dist, self.n_dev, self.schedule,
+                self.mesh)
 
     def replace(self, **kw) -> "DistState":
         return dataclasses.replace(self, **kw)
 
     # ------------------------------------------------------------- pytree
     def tree_flatten(self):
-        children = (self.val, self.idx, self.alpha, self.relabel)
+        children = (self.val, self.idx, self.alpha, self.relabel,
+                    self.sched)
         # aux IS the jit-cache key: one definition, no drift between what
         # forces a retrace and what keys the _JIT_CACHE programs.
         return children, self.aux_key()
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        val, idx, alpha, relabel = children
-        mode, dims, statics, config, dist, n_dev, schedule, mesh = aux
+        val, idx, alpha, relabel, sched = children
+        (mode, dims, statics, lstatics, config, dist, n_dev, schedule,
+         mesh) = aux
         return cls(val=val, idx=idx, alpha=alpha, relabel=tuple(relabel),
-                   mode=mode, dims=dims, statics=statics, config=config,
+                   sched=tuple(sched), mode=mode, dims=dims,
+                   statics=statics, lstatics=lstatics, config=config,
                    dist=dist, n_dev=n_dev, schedule=schedule, mesh=mesh)
 
 
@@ -286,21 +375,31 @@ def shard_state(state: EngineState, mesh: Mesh | ShardingCtx,
                 "(e.g. via core.distributed.build_sharded_flycoo)")
 
     n, m0 = state.nmodes, state.mode
-    sizes = [s.padded_nnz for s in state.statics]
-    slocs = [sz // n_dev for sz in sizes]
+    statics = state.statics
+    geoms = [_block_geometry(statics[d], np.asarray(state.sched[d].bpart),
+                             n_dev) for d in range(n)]
+    lstatics = tuple(_local_static(statics[d], geoms[d][3], n_dev)
+                     for d in range(n))
+    slocs = [ls.padded_nnz for ls in lstatics]
     smax_loc = max(slocs)
     total = n_dev * smax_loc
 
     alpha = np.asarray(state.alpha)
     alive = alpha[:, m0] >= 0
     slots = alpha[alive].astype(np.int64)           # (nnz, n) per-mode slots
-    # device-major renumbering: slot -> dev * smax_loc + (slot % S_d_loc)
+    # device-major renumbering: each device's contiguous block run starts
+    # at local slot 0 -> dslot = dev * smax_loc + (slot - first slot of dev)
     dslots = np.empty_like(slots)
+    devs = np.empty_like(slots)
     for d in range(n):
-        dev, loc = slots[:, d] // slocs[d], slots[:, d] % slocs[d]
-        dslots[:, d] = dev * smax_loc + loc
-    schedule = _schedule_from_slots([slots[:, d] for d in range(n)], sizes,
-                                    n_dev, dist.pad_hop)
+        _, blocks_per_dev, dev_first_block, _ = geoms[d]
+        p = statics[d].block_p
+        dev_of_block = np.repeat(np.arange(n_dev), blocks_per_dev)
+        dev = dev_of_block[slots[:, d] // p]
+        dslots[:, d] = dev * smax_loc + slots[:, d] - dev_first_block[dev] * p
+        devs[:, d] = dev
+    schedule = _schedule_from_devs([devs[:, d] for d in range(n)], n_dev,
+                                   dist.pad_hop)
 
     pos = dslots[:, m0]
     val = np.zeros(total, dtype=np.float32)
@@ -314,14 +413,35 @@ def shard_state(state: EngineState, mesh: Mesh | ShardingCtx,
     sh1 = NamedSharding(mesh, P(da))
     sh2 = NamedSharding(mesh, P(da, None))
     rep = NamedSharding(mesh, P())
+    sched = tuple(
+        _place_sched(_local_sched(state.sched[d], statics[d], geoms[d],
+                                  n_dev), mesh, da)
+        for d in range(n))
     return DistState(
         val=jax.device_put(jnp.asarray(val), sh1),
         idx=jax.device_put(jnp.asarray(idx), sh2),
         alpha=jax.device_put(jnp.asarray(nalpha), sh2),
         relabel=tuple(jax.device_put(r, rep) for r in state.relabel),
-        mode=m0, dims=state.dims, statics=state.statics,
+        sched=sched,
+        mode=m0, dims=state.dims, statics=statics, lstatics=lstatics,
         config=state.config, dist=dist, n_dev=n_dev, schedule=schedule,
         mesh=mesh)
+
+
+def _sched_pspecs(ms: ModeSched, da: str) -> ModeSched:
+    """Partition specs matching one mode's device-major schedule tables."""
+    return ModeSched(
+        bpart=P(da),
+        uidx=None if ms.uidx is None else P(None, da),
+        upos=None if ms.upos is None else P(da, None),
+        nuniq=None if ms.nuniq is None else P(None, da))
+
+
+def _place_sched(ms: ModeSched, mesh: Mesh, da: str) -> ModeSched:
+    specs = _sched_pspecs(ms, da)
+    return ModeSched(*(None if x is None
+                       else jax.device_put(x, NamedSharding(mesh, s))
+                       for x, s in zip(ms, specs)))
 
 
 # --------------------------------------------------------------------------
@@ -395,7 +515,8 @@ def _exchange_all_gather(v, ix, al, alive, *, d, nxt, smax_loc, n_dev, da,
 # --------------------------------------------------------------------------
 # One mode on one device: local EC + output gather + remap exchange.
 # --------------------------------------------------------------------------
-def _dist_mode_branch(d: int, *, statics: Sequence[ModeStatic], n_dev: int,
+def _dist_mode_branch(d: int, *, statics: Sequence[ModeStatic],
+                      lstatics: Sequence[ModeStatic], n_dev: int,
                       smax_loc: int, schedule: ExchangeSchedule,
                       config: ExecutionConfig, dist: DistConfig,
                       fold: FoldFn | None, pad_out_to: int | None):
@@ -404,13 +525,12 @@ def _dist_mode_branch(d: int, *, statics: Sequence[ModeStatic], n_dev: int,
     s = statics[d]
     n = len(statics)
     nxt = (d + 1) % n
-    sloc = s.padded_nnz // n_dev
-    lplan = ModeStatic(kappa=s.kappa // n_dev, rows_pp=s.rows_pp,
-                       blocks_pp=s.blocks_pp, block_p=s.block_p, dim=s.dim)
+    lplan = lstatics[d]
+    sloc = lplan.padded_nnz
     backend = get_backend(config)
     da = dist.data_axis
 
-    def step(layout3, relabels, factors, carry):
+    def step(layout3, relabels, sched, factors, carry):
         val, idx, alpha = layout3           # local (smax_loc, ...) shards
         v, ix, al = val[:sloc], idx[:sloc], alpha[:sloc]
         alive = al[:, d] >= 0
@@ -419,10 +539,11 @@ def _dist_mode_branch(d: int, *, statics: Sequence[ModeStatic], n_dev: int,
         # the exact same contract as the single-device scan; fusing
         # backends (``pallas_fused``) run their plain-EC entry here — the
         # remap is the cross-device exchange below, not a local scatter —
-        # so the in-kernel gather fusion still applies per shard.
+        # so the in-kernel gather fusion (incl. the compact schedule's
+        # in-block dedup) still applies per shard.
         lrow = compute_lrow(ix[:, d], relabels[d], s.rows_pp, alive)
         out_rel_loc = backend({"val": v, "idx": ix, "alpha": al,
-                               "lrow": lrow},
+                               "lrow": lrow, **sched[d]._asdict()},
                               tuple(factors), d, plan=lplan, config=config)
         # Devices own contiguous relabeled-row ranges (kappa % n_dev == 0),
         # so a tiled output gather IS the global relabeled result. This is
@@ -458,7 +579,8 @@ def _specs(dstate: DistState, fold: FoldFn | None):
                          "model_axis=None when folding (e.g. CPD-ALS)")
     layout_specs = (P(da), P(da, None), P(da, None))
     fac_spec = P(None, ma) if ma else P(None, None)
-    in_specs = (layout_specs, P(), fac_spec, P())
+    sched_specs = tuple(_sched_pspecs(ms, da) for ms in dstate.sched)
+    in_specs = (layout_specs, P(), sched_specs, fac_spec, P())
     return layout_specs, fac_spec, in_specs
 
 
@@ -469,7 +591,8 @@ def _build_dist_scan(dstate: DistState, fold: FoldFn | None):
     dims, smax_loc = dstate.dims, dstate.smax_loc
     seq = tuple((m0 + i) % n for i in range(n))
     branches = [
-        _dist_mode_branch(d, statics=dstate.statics, n_dev=dstate.n_dev,
+        _dist_mode_branch(d, statics=dstate.statics,
+                          lstatics=dstate.lstatics, n_dev=dstate.n_dev,
                           smax_loc=smax_loc, schedule=dstate.schedule,
                           config=dstate.config, dist=dstate.dist,
                           fold=fold, pad_out_to=imax)
@@ -477,14 +600,14 @@ def _build_dist_scan(dstate: DistState, fold: FoldFn | None):
     ]
     layout_specs, fac_spec, in_specs = _specs(dstate, fold)
 
-    def local_run(layout3, relabels, factors, carry):
+    def local_run(layout3, relabels, sched, factors, carry):
         TRACE_COUNTS["dist_all_modes"] += 1  # trace-time side effect
 
         def body(sc, mode_t):
             layout3, factors, carry = sc
             nl, out, factors, carry = lax.switch(
                 mode_t,
-                [lambda l3, f, c, b=b: b(l3, relabels, f, c)
+                [lambda l3, f, c, b=b: b(l3, relabels, sched, f, c)
                  for b in branches],
                 layout3, factors, carry)
             return (nl, factors, carry), out
@@ -502,15 +625,16 @@ def _build_dist_scan(dstate: DistState, fold: FoldFn | None):
 def _build_dist_step(dstate: DistState):
     """Single-mode program: EC + exchange for the resident mode only."""
     d = dstate.mode
-    step = _dist_mode_branch(d, statics=dstate.statics, n_dev=dstate.n_dev,
+    step = _dist_mode_branch(d, statics=dstate.statics,
+                             lstatics=dstate.lstatics, n_dev=dstate.n_dev,
                              smax_loc=dstate.smax_loc,
                              schedule=dstate.schedule, config=dstate.config,
                              dist=dstate.dist, fold=None, pad_out_to=None)
     layout_specs, fac_spec, in_specs = _specs(dstate, None)
 
-    def local_run(layout3, relabels, factors, carry):
+    def local_run(layout3, relabels, sched, factors, carry):
         TRACE_COUNTS["dist_mttkrp"] += 1  # trace-time side effect
-        nl, out, _, _ = step(layout3, relabels, factors, carry)
+        nl, out, _, _ = step(layout3, relabels, sched, factors, carry)
         return nl, out
 
     return shard_map(local_run, dstate.mesh, in_specs,
@@ -532,7 +656,7 @@ def dist_mttkrp(dstate: DistState, factors: Sequence[jax.Array]):
     DISPATCH_COUNTS["dist_mttkrp"] += 1
     (nval, nidx, nalpha), out = fn(
         (dstate.val, dstate.idx, dstate.alpha), dstate.relabel,
-        tuple(factors), None)
+        dstate.sched, tuple(factors), None)
     nxt = (dstate.mode + 1) % dstate.nmodes
     return out, dstate.replace(val=nval, idx=nidx, alpha=nalpha, mode=nxt)
 
@@ -555,7 +679,7 @@ def dist_all_modes(dstate: DistState, factors: Sequence[jax.Array], *,
     DISPATCH_COUNTS["dist_all_modes"] += 1
     layout3, outs, out_factors, out_carry = fn(
         (dstate.val, dstate.idx, dstate.alpha), dstate.relabel,
-        tuple(factors), carry)
+        dstate.sched, tuple(factors), carry)
     nval, nidx, nalpha = layout3
     next_state = dstate.replace(val=nval, idx=nidx, alpha=nalpha)
     if fold is None:
@@ -570,9 +694,10 @@ def lowered_text(dstate: DistState, factors: Sequence[jax.Array], *,
     fn = _build_dist_scan(dstate, fold)
     return jax.jit(fn).lower(
         (dstate.val, dstate.idx, dstate.alpha), dstate.relabel,
-        tuple(factors), carry).as_text()
+        dstate.sched, tuple(factors), carry).as_text()
 
 
 __all__ = ["DistConfig", "DistState", "ExchangeSchedule", "shard_state",
            "dist_mttkrp", "dist_all_modes", "schedule_for_plans",
-           "exchange_bytes", "row_bytes", "lowered_text", "EXCHANGES"]
+           "element_devices", "exchange_bytes", "row_bytes", "lowered_text",
+           "EXCHANGES"]

@@ -13,6 +13,11 @@ Array leaves (pytree children):
   alpha    (S_max, N)   i32   alpha — slot of the element in every mode
                               layout (-1 in pads)
   relabel  N x (I_d,)   i32   old row id -> relabeled row id, per mode
+  sched    N x ModeSched      per-mode block-schedule tables: the block ->
+                              partition descriptor and (compact schedule)
+                              the in-block factor-row dedup tables. Unlike
+                              the layout triple these never remap — they
+                              describe the mode-d slot space itself.
 
 Static aux_data (hashable, part of the jit cache key):
   mode     int                 which mode's layout is resident
@@ -23,7 +28,7 @@ Static aux_data (hashable, part of the jit cache key):
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 
@@ -38,9 +43,13 @@ class ModeStatic(NamedTuple):
     blocks_pp: int
     block_p: int
     dim: int
+    nblocks: int = -1        # total kernel blocks; -1 = rect default
+    schedule: str = "rect"   # "compact" | "rect" block schedule
 
     @property
     def padded_nnz(self) -> int:
+        if self.schedule == "compact":
+            return self.nblocks * self.block_p
         return self.kappa * self.blocks_pp * self.block_p
 
     @property
@@ -48,10 +57,30 @@ class ModeStatic(NamedTuple):
         return self.kappa * self.rows_pp
 
 
+class ModeSched(NamedTuple):
+    """Per-mode device-resident schedule tables (pytree of array leaves).
+
+    ``bpart`` is the ``(nblocks,)`` block -> partition descriptor (present
+    for both schedules). The dedup tables (see ``FlycooTensor.
+    dedup_tables``) are built for the ``compact`` schedule only and are
+    ``None`` under ``rect``:
+
+      uidx   (N-1, S_d)      per-block unique factor rows, front-compacted
+      upos   (S_d, N-1)      per-slot stage position among the uniques
+      nuniq  (N-1, nblocks)  per-block unique-row counts
+    """
+
+    bpart: jax.Array
+    uidx: Optional[jax.Array] = None
+    upos: Optional[jax.Array] = None
+    nuniq: Optional[jax.Array] = None
+
+
 def mode_static_from_plan(plan) -> ModeStatic:
     return ModeStatic(kappa=plan.kappa, rows_pp=plan.rows_pp,
                       blocks_pp=plan.blocks_pp, block_p=plan.block_p,
-                      dim=plan.dim)
+                      dim=plan.dim, nblocks=plan.nblocks,
+                      schedule=plan.schedule)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -63,6 +92,7 @@ class EngineState:
     idx: jax.Array
     alpha: jax.Array
     relabel: tuple[jax.Array, ...]
+    sched: tuple[ModeSched, ...]
     mode: int
     dims: tuple[int, ...]
     statics: tuple[ModeStatic, ...]
@@ -96,16 +126,18 @@ class EngineState:
 
     # ------------------------------------------------------------- pytree
     def tree_flatten(self):
-        children = (self.val, self.idx, self.alpha, self.relabel)
+        children = (self.val, self.idx, self.alpha, self.relabel,
+                    self.sched)
         aux = (self.mode, self.dims, self.statics, self.config)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        val, idx, alpha, relabel = children
+        val, idx, alpha, relabel, sched = children
         mode, dims, statics, config = aux
         return cls(val=val, idx=idx, alpha=alpha, relabel=tuple(relabel),
-                   mode=mode, dims=dims, statics=statics, config=config)
+                   sched=tuple(sched), mode=mode, dims=dims,
+                   statics=statics, config=config)
 
 
-__all__ = ["EngineState", "ModeStatic", "mode_static_from_plan"]
+__all__ = ["EngineState", "ModeStatic", "ModeSched", "mode_static_from_plan"]

@@ -2,11 +2,10 @@
 
 This is the TPU adaptation of the paper's thread-block kernel (Alg. 2/4):
 
-  * grid = (kappa, blocks_pp): partition j's nonzero blocks iterate with the
-    *output row tile resident in VMEM* — the paper's "intermediate values
-    never visit global memory" (its challenge (2)) becomes "the (P, R)
-    Hadamard partials live in VREGs and the (rows_pp, R) accumulator lives in
-    VMEM for the whole partition".
+  * the grid walks nonzero blocks with the *output row tile resident in
+    VMEM* — the paper's "intermediate values never visit global memory"
+    (its challenge (2)) becomes "the (P, R) Hadamard partials live in VREGs
+    and the (rows_pp, R) accumulator lives in VMEM for the whole partition".
   * the scatter-add that GPUs do with intra-block atomics becomes a one-hot
     MXU contraction: out_tile += onehot(lrow)^T @ partials, a dense
     (rows_pp x P) @ (P x R) matmul — the TPU-idiomatic segment reduction.
@@ -17,28 +16,49 @@ This is the TPU adaptation of the paper's thread-block kernel (Alg. 2/4):
 Pad slots carry lrow = -1; the one-hot comparison yields an all-zero column
 for them, so they contribute nothing even when a pad val is nonzero.
 
-Two pipelines:
+Grid schedules (paper challenge (3): balanced block workloads):
 
-  ``mttkrp_fused``         takes a pre-gathered ``(S, N-1, R)`` array that
-                           XLA materializes in HBM before the kernel runs —
-                           the comparison baseline (engine backend
-                           ``pallas``).
-  ``mttkrp_fused_gather``  zero-HBM-intermediate pipeline (engine backend
-                           ``pallas_fused``): the per-slot factor-row
-                           indices are *scalar-prefetched* into SMEM
-                           (``PrefetchScalarGridSpec``), the factor matrices
-                           stay in ``ANY``/HBM, and each grid step DMAs the
-                           P needed rows of every input factor into a
-                           double-buffered VMEM stage (block b+1's gather is
-                           in flight while block b computes). The
-                           ``(S, N-1, R)`` gathered intermediate never
-                           exists.
-  ``mttkrp_fused_remap``   same pass, plus the Alg. 3 dynamic remap: the
-                           kernel scatters each alive slot's (val, idx,
-                           alpha) row to its ``alpha[:, next]`` destination
-                           in VMEM-resident next-layout buffers, replacing
-                           the three separate full-``S_max`` XLA scatters
-                           the scan step used to issue.
+  *rect*      grid = (kappa, blocks_pp): every partition padded to the max
+              partition's block count. Simple, but on skewed tensors most
+              grid steps process pure padding — kept as the baseline.
+  *compact*   grid = (nblocks,): a 1-D walk over only the real blocks. The
+              host plan emits a ``(nblocks,)`` block->partition descriptor
+              (``bpart``) which is *scalar-prefetched*; the output BlockSpec
+              index map reads ``bpart[b]`` to pick the resident row tile and
+              the accumulator init keys off "first block of my partition"
+              (``bpart[b] != bpart[b-1]``).
+
+Pipelines (x2 schedules):
+
+  ``mttkrp_fused[_compact]``        take a pre-gathered ``(S, N-1, R)``
+                                    operand that XLA materializes in HBM —
+                                    the comparison baseline (engine backend
+                                    ``pallas``).
+  ``mttkrp_fused_gather[_compact]`` zero-HBM-intermediate pipeline (engine
+                                    backend ``pallas_fused``): factor
+                                    matrices stay in ``ANY``/HBM and each
+                                    grid step DMAs the needed rows into a
+                                    double-buffered VMEM stage (block b+1's
+                                    gather in flight while block b
+                                    computes). The compact variant adds
+                                    *in-block factor-row dedup*: the plan
+                                    pre-sorts each block's factor-row list
+                                    into ``U <= P`` unique rows (``uidx`` /
+                                    ``nuniq``, scalar-prefetched) so the
+                                    kernel issues ``U`` row DMAs instead of
+                                    ``P`` — Zipf-heavy tensors re-fetch hot
+                                    rows many times per block otherwise —
+                                    and the EC body gathers its Hadamard
+                                    operands through the per-slot stage
+                                    positions ``upos`` with a one-hot MXU
+                                    select (no dynamic VMEM gather needed).
+  ``mttkrp_fused_remap[_compact]``  same pass, plus the Alg. 3 dynamic
+                                    remap: the kernel scatters each alive
+                                    slot's (val, idx, alpha) row to its
+                                    ``alpha[:, next]`` destination in
+                                    VMEM-resident next-layout buffers,
+                                    replacing three full-``S_max`` XLA
+                                    scatters per scan step.
 
 Block shape knobs mirror the paper's R x P thread block (Fig. 4): P is the
 number of nonzeros entering per step (paper picks P=32 for 1024-thread
@@ -55,13 +75,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _ec_compute(parts, val_ref, lrow_ref, out_ref, *, rows_pp: int):
-    """Shared EC body of both pipelines: Hadamard the staged factor rows,
+def _ec_compute(parts, val_ref, lrow_ref, out_ref, *, rows_pp: int, first):
+    """Shared EC body of all pipelines: Hadamard the staged factor rows,
     scale by val, one-hot-MXU segment-reduce into the resident out tile.
     ``parts`` is the per-input-mode list of (P, R) row blocks (however they
-    were staged — HBM operand or in-kernel DMA)."""
-    t = pl.program_id(1)
-
+    were staged — HBM operand or in-kernel DMA); ``first`` is true on the
+    first grid step owning this output tile (accumulator init)."""
     ell = parts[0]
     for part in parts[1:]:                     # Hadamard across input modes
         ell = ell * part                       # (Alg. 2 lines 11-13)
@@ -75,18 +94,35 @@ def _ec_compute(parts, val_ref, lrow_ref, out_ref, *, rows_pp: int):
     ).astype(jnp.float32)                      # (rows_pp, P); -1 rows vanish
     contrib = jnp.dot(onehot, ell, preferred_element_type=jnp.float32)
 
-    @pl.when(t == 0)
+    @pl.when(first)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
     out_ref[...] += contrib
 
 
+def _compact_first(bpart_ref, b):
+    """Accumulator-init predicate under the compact schedule: this block is
+    the first of its partition (the descriptor is nondecreasing)."""
+    part = bpart_ref[b]
+    prev = bpart_ref[jnp.maximum(b - 1, 0)]
+    return jnp.logical_or(b == 0, part != prev)
+
+
 def _ec_kernel(gathered_ref, val_ref, lrow_ref, out_ref, *, rows_pp: int):
-    """One (partition j, block t) grid step."""
+    """One (partition j, block t) rect grid step."""
     g = gathered_ref[...]                      # (P, N-1, R) f32
     _ec_compute([g[:, w, :] for w in range(g.shape[1])], val_ref, lrow_ref,
-                out_ref, rows_pp=rows_pp)
+                out_ref, rows_pp=rows_pp, first=pl.program_id(1) == 0)
+
+
+def _compact_ec_kernel(bpart_ref, gathered_ref, val_ref, lrow_ref, out_ref,
+                       *, rows_pp: int):
+    """One block of the descriptor-driven compact grid (pre-gathered)."""
+    g = gathered_ref[...]
+    _ec_compute([g[:, w, :] for w in range(g.shape[1])], val_ref, lrow_ref,
+                out_ref, rows_pp=rows_pp,
+                first=_compact_first(bpart_ref, pl.program_id(0)))
 
 
 @functools.partial(
@@ -130,13 +166,82 @@ def mttkrp_fused(
     )(gathered, val2, lrow2)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("kappa", "rows_pp", "nblocks", "block_p", "interpret"),
+)
+def mttkrp_fused_compact(
+    gathered: jax.Array,   # (S, N-1, R) gathered input-factor rows
+    val: jax.Array,        # (S,) nonzero values (0 in pads)
+    lrow: jax.Array,       # (S,) local output rows (-1 in pads)
+    bpart: jax.Array,      # (nblocks,) block -> partition descriptor
+    *,
+    kappa: int,
+    rows_pp: int,
+    nblocks: int,
+    block_p: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Compact-schedule EC baseline: a 1-D grid over real blocks only, the
+    output tile picked by the scalar-prefetched descriptor."""
+    s, nm1, r = gathered.shape
+    assert s == nblocks * block_p, (s, nblocks, block_p)
+    val2 = val.reshape(s, 1).astype(jnp.float32)
+    lrow2 = lrow.reshape(s, 1).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block_p, nm1, r), lambda b, bp: (b, 0, 0)),
+            pl.BlockSpec((block_p, 1), lambda b, bp: (b, 0)),
+            pl.BlockSpec((block_p, 1), lambda b, bp: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows_pp, r), lambda b, bp: (bp[b], 0)),
+        scratch_shapes=[],
+    )
+    return pl.pallas_call(
+        functools.partial(_compact_ec_kernel, rows_pp=rows_pp),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((kappa * rows_pp, r), jnp.float32),
+        interpret=interpret,
+    )(bpart.astype(jnp.int32), gathered, val2, lrow2)
+
+
 # --------------------------------------------------------------------------
 # Zero-HBM-intermediate pipeline: in-kernel gather (+ optional remap).
 # --------------------------------------------------------------------------
+def _remap_init_and_scatter(b, val_ref, idx_ref, alpha_ref, nval_ref,
+                            nidx_ref, nalpha_ref, *, block_p: int,
+                            next_mode: int):
+    """Alg. 3 in-kernel: initialize the resident next-layout buffers on the
+    first grid step, then scatter every alive slot to its
+    ``alpha[:, next_mode]`` destination (conflict-free by construction —
+    destinations are a permutation of the alive slots; pads carry -1)."""
+
+    @pl.when(b == 0)
+    def _init_next_layout():
+        nval_ref[...] = jnp.zeros_like(nval_ref)
+        nidx_ref[...] = jnp.zeros_like(nidx_ref)
+        nalpha_ref[...] = jnp.full_like(nalpha_ref, -1)
+
+    def scatter(i, _):
+        d = alpha_ref[i, next_mode]
+
+        @pl.when(d >= 0)
+        def _move():
+            nval_ref[pl.ds(d, 1), :] = val_ref[pl.ds(i, 1), :]
+            nidx_ref[pl.ds(d, 1), :] = idx_ref[pl.ds(i, 1), :]
+            nalpha_ref[pl.ds(d, 1), :] = alpha_ref[pl.ds(i, 1), :]
+        return 0
+
+    lax.fori_loop(0, block_p, scatter, 0)
+
+
 def _fused_gather_kernel(lidx_ref, *refs, nm1: int, rows_pp: int,
                          blocks_pp: int, block_p: int, nblocks: int,
                          next_mode: int | None):
-    """One (partition j, block t) step of the fused pipeline.
+    """One (partition j, block t) step of the rect fused pipeline.
 
     ``lidx_ref`` is the scalar-prefetched ``(N-1, S)`` factor-row index
     table (SMEM). The input factors live in ``ANY`` (HBM on TPU); their
@@ -188,36 +293,99 @@ def _fused_gather_kernel(lidx_ref, *refs, nm1: int, rows_pp: int,
 
     g = scratch[pl.ds(slot, 1)][0]         # (N-1, P, R) staged factor rows
     _ec_compute([g[w] for w in range(nm1)], val_ref, lrow_ref, out_ref,
-                rows_pp=rows_pp)
+                rows_pp=rows_pp, first=t == 0)
 
-    if not with_remap:
-        return
+    if with_remap:
+        _remap_init_and_scatter(b, val_ref, idx_ref, alpha_ref, nval_ref,
+                                nidx_ref, nalpha_ref, block_p=block_p,
+                                next_mode=next_mode)
+
+
+def _compact_gather_kernel(bpart_ref, uidx_ref, nuniq_ref, *refs, nm1: int,
+                           rows_pp: int, block_p: int, nblocks: int,
+                           next_mode: int | None):
+    """One block of the compact fused pipeline with in-block row dedup.
+
+    Scalar-prefetched tables: ``bpart (nblocks,)`` block->partition,
+    ``uidx (N-1, S)`` per-block unique factor rows (front-compacted),
+    ``nuniq (N-1, nblocks)`` per-block unique counts. Each grid step DMAs
+    only the ``U = nuniq[w, b] <= P`` unique rows of every input factor
+    into the double-buffered VMEM stage; the EC body routes each slot to
+    its staged row through ``upos`` (a one-hot MXU select — no dynamic
+    VMEM gather). With ``next_mode`` set the same pass owns the resident
+    next-layout buffers and scatters the Alg. 3 remap.
+    """
+    with_remap = next_mode is not None
+    if with_remap:
+        val_ref, lrow_ref, upos_ref, idx_ref, alpha_ref = refs[:5]
+        facs = refs[5:5 + nm1]
+        (out_ref, nval_ref, nidx_ref, nalpha_ref,
+         scratch, sems) = refs[5 + nm1:]
+    else:
+        val_ref, lrow_ref, upos_ref = refs[:3]
+        facs = refs[3:3 + nm1]
+        out_ref, scratch, sems = refs[3 + nm1:]
+
+    b = pl.program_id(0)
+    slot = b % 2
+
+    # The one-hot stage-select below reads the WHOLE staged block (rows
+    # >= U included, weighted 0); zero the stage once so step 0/1 never
+    # multiplies uninitialized VMEM (0 * garbage need not be 0). Later
+    # steps only ever see stale-but-finite factor rows.
+    @pl.when(b == 0)
+    def _zero_stage():
+        scratch[...] = jnp.zeros_like(scratch)
+
+    def gather(block, sl, wait: bool):
+        # U row copies per factor instead of P: hot rows fetched once.
+        for w, f in enumerate(facs):
+            def body(u, _, w=w, f=f):
+                row = uidx_ref[w, block * block_p + u]
+                cp = pltpu.make_async_copy(
+                    f.at[pl.ds(row, 1)],
+                    scratch.at[sl, w, pl.ds(u, 1)],
+                    sems.at[sl])
+                (cp.wait if wait else cp.start)()
+                return 0
+
+            lax.fori_loop(0, nuniq_ref[w, block], body, 0)
 
     @pl.when(b == 0)
-    def _init_next_layout():
-        nval_ref[...] = jnp.zeros_like(nval_ref)
-        nidx_ref[...] = jnp.zeros_like(nidx_ref)
-        nalpha_ref[...] = jnp.full_like(nalpha_ref, -1)
+    def _prologue():                       # block 0 has nobody to hide under
+        gather(0, 0, wait=False)
 
-    def scatter(i, _):
-        # Alg. 3: conflict-free by construction — destinations are a
-        # permutation of the alive slots; pads carry alpha = -1.
-        d = alpha_ref[i, next_mode]
+    @pl.when(b + 1 < nblocks)
+    def _prefetch_next():                  # overlap: issue b+1, compute b
+        gather(b + 1, (b + 1) % 2, wait=False)
 
-        @pl.when(d >= 0)
-        def _move():
-            nval_ref[pl.ds(d, 1), :] = val_ref[pl.ds(i, 1), :]
-            nidx_ref[pl.ds(d, 1), :] = idx_ref[pl.ds(i, 1), :]
-            nalpha_ref[pl.ds(d, 1), :] = alpha_ref[pl.ds(i, 1), :]
-        return 0
+    gather(b, slot, wait=True)
 
-    lax.fori_loop(0, block_p, scatter, 0)
+    g = scratch[pl.ds(slot, 1)][0]         # (N-1, P, R) staged unique rows
+    pos = upos_ref[...]                    # (P, N-1) per-slot stage position
+    parts = []
+    for w in range(nm1):
+        # slot i's operand row = staged[pos[i]]: a (P x P) one-hot select
+        # matmul (MXU-friendly; dynamic VMEM gathers are not).
+        sel = (
+            pos[:, w][:, None]
+            == lax.broadcasted_iota(jnp.int32, (block_p, block_p), 1)
+        ).astype(jnp.float32)
+        parts.append(jnp.dot(sel, g[w], preferred_element_type=jnp.float32))
+
+    _ec_compute(parts, val_ref, lrow_ref, out_ref, rows_pp=rows_pp,
+                first=_compact_first(bpart_ref, b))
+
+    if with_remap:
+        _remap_init_and_scatter(b, val_ref, idx_ref, alpha_ref, nval_ref,
+                                nidx_ref, nalpha_ref, block_p=block_p,
+                                next_mode=next_mode)
 
 
 def _fused_specs(nm1: int, r: int, block_p: int, blocks_pp: int,
                  rows_pp: int):
-    """Shared in/out specs of the fused pipelines (scalar-prefetch aware:
-    index maps take the prefetch ref as trailing argument)."""
+    """Shared in/out specs of the rect fused pipelines (scalar-prefetch
+    aware: index maps take the prefetch ref as trailing argument)."""
     def eblk(j, t, lidx, bpp=blocks_pp):
         return (j * bpp + t, 0)
 
@@ -227,6 +395,22 @@ def _fused_specs(nm1: int, r: int, block_p: int, blocks_pp: int,
     scratch = [pltpu.VMEM((2, nm1, block_p, r), jnp.float32),
                pltpu.SemaphoreType.DMA((2,))]
     return elem, fac, out, scratch
+
+
+def _compact_fused_specs(nm1: int, r: int, block_p: int, rows_pp: int):
+    """Shared in/out specs of the compact fused pipelines. Index maps take
+    the three prefetch refs (bpart, uidx, nuniq) as trailing arguments; the
+    output tile is the descriptor lookup."""
+    def eblk(b, bp, ui, nu):
+        return (b, 0)
+
+    elem = pl.BlockSpec((block_p, 1), eblk)
+    posb = pl.BlockSpec((block_p, nm1), eblk)
+    fac = pl.BlockSpec(memory_space=pltpu.ANY)
+    out = pl.BlockSpec((rows_pp, r), lambda b, bp, ui, nu: (bp[b], 0))
+    scratch = [pltpu.VMEM((2, nm1, block_p, r), jnp.float32),
+               pltpu.SemaphoreType.DMA((2,))]
+    return elem, posb, fac, out, scratch
 
 
 @functools.partial(
@@ -273,6 +457,56 @@ def mttkrp_fused_gather(
         out_shape=jax.ShapeDtypeStruct((kappa * rows_pp, r), jnp.float32),
         interpret=interpret,
     )(lidx.astype(jnp.int32), val2, lrow2, *factors)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kappa", "rows_pp", "nblocks", "block_p", "interpret"),
+)
+def mttkrp_fused_gather_compact(
+    val: jax.Array,        # (S,) nonzero values (0 in pads)
+    lrow: jax.Array,       # (S,) local output rows (-1 in pads)
+    upos: jax.Array,       # (S, N-1) per-slot stage position (0 in pads)
+    bpart: jax.Array,      # (nblocks,) block -> partition (prefetched)
+    uidx: jax.Array,       # (N-1, S) per-block unique rows (prefetched)
+    nuniq: jax.Array,      # (N-1, nblocks) unique counts (prefetched)
+    factors: tuple,        # N-1 arrays (I_w, R), kept in ANY/HBM
+    *,
+    kappa: int,
+    rows_pp: int,
+    nblocks: int,
+    block_p: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Compact-schedule fused gather with in-block row dedup; returns
+    out_rel (kappa*rows_pp, R)."""
+    s = val.shape[0]
+    nm1 = len(factors)
+    r = factors[0].shape[1]
+    assert s == nblocks * block_p, (s, nblocks, block_p)
+    assert uidx.shape == (nm1, s) and upos.shape == (s, nm1)
+    assert nuniq.shape == (nm1, nblocks)
+    val2 = val.reshape(s, 1).astype(jnp.float32)
+    lrow2 = lrow.reshape(s, 1).astype(jnp.int32)
+
+    elem, posb, fac, out, scratch = _compact_fused_specs(nm1, r, block_p,
+                                                         rows_pp)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(nblocks,),
+        in_specs=[elem, elem, posb] + [fac] * nm1,
+        out_specs=out,
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        functools.partial(_compact_gather_kernel, nm1=nm1, rows_pp=rows_pp,
+                          block_p=block_p, nblocks=nblocks, next_mode=None),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((kappa * rows_pp, r), jnp.float32),
+        interpret=interpret,
+    )(bpart.astype(jnp.int32), uidx.astype(jnp.int32),
+      nuniq.astype(jnp.int32), val2, lrow2, upos.astype(jnp.int32),
+      *factors)
 
 
 @functools.partial(
@@ -338,4 +572,71 @@ def mttkrp_fused_remap(
         interpret=interpret,
     )(lidx.astype(jnp.int32), val2, lrow2, idx.astype(jnp.int32),
       alpha.astype(jnp.int32), *factors)
+    return out_rel, nval[:, 0], nidx, nalpha
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kappa", "rows_pp", "nblocks", "block_p", "smax",
+                     "next_mode", "interpret"),
+)
+def mttkrp_fused_remap_compact(
+    val: jax.Array,        # (S,) nonzero values (0 in pads)
+    idx: jax.Array,        # (S, N) original indices
+    alpha: jax.Array,      # (S, N) per-mode slot table (-1 in pads)
+    lrow: jax.Array,       # (S,) local output rows (-1 in pads)
+    upos: jax.Array,       # (S, N-1) per-slot stage position (0 in pads)
+    bpart: jax.Array,      # (nblocks,) block -> partition (prefetched)
+    uidx: jax.Array,       # (N-1, S) per-block unique rows (prefetched)
+    nuniq: jax.Array,      # (N-1, nblocks) unique counts (prefetched)
+    factors: tuple,        # N-1 arrays (I_w, R), kept in ANY/HBM
+    *,
+    kappa: int,
+    rows_pp: int,
+    nblocks: int,
+    block_p: int,
+    smax: int,
+    next_mode: int,
+    interpret: bool = False,
+):
+    """Compact-schedule fused EC + Alg. 3 remap with in-block row dedup;
+    one Pallas pass returning ``(out_rel, nval, nidx, nalpha)``."""
+    s = val.shape[0]
+    n = idx.shape[1]
+    nm1 = len(factors)
+    r = factors[0].shape[1]
+    assert s == nblocks * block_p, (s, nblocks, block_p)
+    assert s <= smax and uidx.shape == (nm1, s) and upos.shape == (s, nm1)
+    assert nuniq.shape == (nm1, nblocks)
+    assert 0 <= next_mode < n
+    val2 = val.reshape(s, 1).astype(jnp.float32)
+    lrow2 = lrow.reshape(s, 1).astype(jnp.int32)
+
+    elem, posb, fac, out, scratch = _compact_fused_specs(nm1, r, block_p,
+                                                         rows_pp)
+    eblk_n = pl.BlockSpec((block_p, n), lambda b, bp, ui, nu: (b, 0))
+    resident1 = pl.BlockSpec((smax, 1), lambda b, bp, ui, nu: (0, 0))
+    resident_n = pl.BlockSpec((smax, n), lambda b, bp, ui, nu: (0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(nblocks,),
+        in_specs=[elem, elem, posb, eblk_n, eblk_n] + [fac] * nm1,
+        out_specs=[out, resident1, resident_n, resident_n],
+        scratch_shapes=scratch,
+    )
+    out_rel, nval, nidx, nalpha = pl.pallas_call(
+        functools.partial(_compact_gather_kernel, nm1=nm1, rows_pp=rows_pp,
+                          block_p=block_p, nblocks=nblocks,
+                          next_mode=next_mode),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((kappa * rows_pp, r), jnp.float32),
+            jax.ShapeDtypeStruct((smax, 1), jnp.float32),
+            jax.ShapeDtypeStruct((smax, n), jnp.int32),
+            jax.ShapeDtypeStruct((smax, n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(bpart.astype(jnp.int32), uidx.astype(jnp.int32),
+      nuniq.astype(jnp.int32), val2, lrow2, upos.astype(jnp.int32),
+      idx.astype(jnp.int32), alpha.astype(jnp.int32), *factors)
     return out_rel, nval[:, 0], nidx, nalpha

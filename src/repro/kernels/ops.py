@@ -20,8 +20,13 @@ from repro.engine.config import platform_default_interpret
 
 from . import ref
 from .mttkrp_kernel import mttkrp_fused as _mttkrp_fused
+from .mttkrp_kernel import mttkrp_fused_compact as _mttkrp_fused_compact
 from .mttkrp_kernel import mttkrp_fused_gather as _mttkrp_fused_gather
+from .mttkrp_kernel import (
+    mttkrp_fused_gather_compact as _mttkrp_fused_gather_compact)
 from .mttkrp_kernel import mttkrp_fused_remap as _mttkrp_fused_remap
+from .mttkrp_kernel import (
+    mttkrp_fused_remap_compact as _mttkrp_fused_remap_compact)
 from .lru_scan import lru_scan as _lru_scan
 from .wkv6 import wkv6 as _wkv6
 
@@ -43,6 +48,16 @@ def mttkrp_fused(gathered, val, lrow, *, kappa, rows_pp, blocks_pp, block_p,
                          interpret=resolve_interpret(interpret, config))
 
 
+def mttkrp_fused_compact(gathered, val, lrow, bpart, *, kappa, rows_pp,
+                         nblocks, block_p, interpret: bool | None = None,
+                         config=None):
+    """Descriptor-driven compact-schedule EC baseline (1-D block grid)."""
+    return _mttkrp_fused_compact(
+        gathered, val, lrow, bpart, kappa=kappa, rows_pp=rows_pp,
+        nblocks=nblocks, block_p=block_p,
+        interpret=resolve_interpret(interpret, config))
+
+
 def mttkrp_fused_gather(val, lrow, lidx, factors, *, kappa, rows_pp,
                         blocks_pp, block_p, interpret: bool | None = None,
                         config=None):
@@ -50,6 +65,17 @@ def mttkrp_fused_gather(val, lrow, lidx, factors, *, kappa, rows_pp,
     return _mttkrp_fused_gather(
         val, lrow, lidx, tuple(factors), kappa=kappa, rows_pp=rows_pp,
         blocks_pp=blocks_pp, block_p=block_p,
+        interpret=resolve_interpret(interpret, config))
+
+
+def mttkrp_fused_gather_compact(val, lrow, upos, bpart, uidx, nuniq,
+                                factors, *, kappa, rows_pp, nblocks,
+                                block_p, interpret: bool | None = None,
+                                config=None):
+    """Compact fused gather with in-block factor-row dedup (U <= P DMAs)."""
+    return _mttkrp_fused_gather_compact(
+        val, lrow, upos, bpart, uidx, nuniq, tuple(factors), kappa=kappa,
+        rows_pp=rows_pp, nblocks=nblocks, block_p=block_p,
         interpret=resolve_interpret(interpret, config))
 
 
@@ -61,6 +87,18 @@ def mttkrp_fused_remap(val, idx, alpha, lrow, lidx, factors, *, kappa,
         val, idx, alpha, lrow, lidx, tuple(factors), kappa=kappa,
         rows_pp=rows_pp, blocks_pp=blocks_pp, block_p=block_p, smax=smax,
         next_mode=next_mode,
+        interpret=resolve_interpret(interpret, config))
+
+
+def mttkrp_fused_remap_compact(val, idx, alpha, lrow, upos, bpart, uidx,
+                               nuniq, factors, *, kappa, rows_pp, nblocks,
+                               block_p, smax, next_mode,
+                               interpret: bool | None = None, config=None):
+    """Compact fused EC + remap with in-block dedup (one pass, 4 outputs)."""
+    return _mttkrp_fused_remap_compact(
+        val, idx, alpha, lrow, upos, bpart, uidx, nuniq, tuple(factors),
+        kappa=kappa, rows_pp=rows_pp, nblocks=nblocks, block_p=block_p,
+        smax=smax, next_mode=next_mode,
         interpret=resolve_interpret(interpret, config))
 
 
@@ -76,5 +114,7 @@ def wkv6(r, k, w, v, u, *, chunk: int = 16, interpret: bool | None = None,
                  interpret=resolve_interpret(interpret, config))
 
 
-__all__ = ["mttkrp_fused", "mttkrp_fused_gather", "mttkrp_fused_remap",
-           "lru_scan", "wkv6", "ref", "resolve_interpret"]
+__all__ = ["mttkrp_fused", "mttkrp_fused_compact", "mttkrp_fused_gather",
+           "mttkrp_fused_gather_compact", "mttkrp_fused_remap",
+           "mttkrp_fused_remap_compact", "lru_scan", "wkv6", "ref",
+           "resolve_interpret"]

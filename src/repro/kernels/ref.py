@@ -7,11 +7,24 @@ import jax.numpy as jnp
 
 def mttkrp_fused_ref(gathered, val, lrow, *, kappa, rows_pp, blocks_pp,
                      block_p):
-    """Oracle for kernels.mttkrp_kernel.mttkrp_fused."""
+    """Oracle for kernels.mttkrp_kernel.mttkrp_fused (rect schedule)."""
     s = gathered.shape[0]
+    part = jnp.arange(s, dtype=jnp.int32) // (blocks_pp * block_p)
+    return _segment_reduce(gathered, val, lrow, part, kappa, rows_pp)
+
+
+def mttkrp_fused_compact_ref(gathered, val, lrow, bpart, *, kappa, rows_pp,
+                             block_p):
+    """Oracle for the compact-schedule kernels: the owning partition comes
+    from the block->partition descriptor instead of a fixed stride."""
+    s = gathered.shape[0]
+    slot = jnp.arange(s, dtype=jnp.int32)
+    part = jnp.take(bpart, slot // block_p, axis=0)
+    return _segment_reduce(gathered, val, lrow, part, kappa, rows_pp)
+
+
+def _segment_reduce(gathered, val, lrow, part, kappa, rows_pp):
     ell = jnp.prod(gathered, axis=1) * val[:, None].astype(jnp.float32)
-    stride = blocks_pp * block_p
-    part = jnp.arange(s, dtype=jnp.int32) // stride
     gid = jnp.where(lrow < 0, 0, part * rows_pp + lrow)
     ell = jnp.where((lrow < 0)[:, None], 0.0, ell)
     return jax.ops.segment_sum(ell, gid, num_segments=kappa * rows_pp)

@@ -278,8 +278,8 @@ def test_exchange_schedule_is_static_upper_bound():
     import numpy as np
 
     from repro.core.distributed import build_sharded_flycoo
-    from repro.engine.dist import (exchange_bytes, row_bytes,
-                                   schedule_for_plans)
+    from repro.engine.dist import (element_devices, exchange_bytes,
+                                   row_bytes, schedule_for_plans)
 
     rng = np.random.default_rng(2)
     dims = (40, 30, 20)
@@ -287,40 +287,85 @@ def test_exchange_schedule_is_static_upper_bound():
         [rng.integers(0, d, 1200) for d in dims], 1).astype(np.int32),
         axis=0)
     val = rng.standard_normal(idx.shape[0]).astype(np.float32)
-    t = build_sharded_flycoo(idx, val, dims, n_dev=4, rows_pp=8, block_p=8)
-    for p in t.plans:
-        assert p.kappa % 4 == 0
     n = len(dims)
-    for n_dev, pad in ((2, 8), (4, 4)):
-        sched = schedule_for_plans(t.plans, n_dev, pad_hop=pad)
-        assert sched.n_dev == n_dev
-        assert len(sched.hops) == n
-        for d in range(n):
-            src = t.plans[d].slot_of_elem // \
-                (t.plans[d].padded_nnz // n_dev)
-            nxt = (d + 1) % n
-            dst = t.plans[nxt].slot_of_elem // \
-                (t.plans[nxt].padded_nnz // n_dev)
-            assert len(sched.hops[d]) == n_dev - 1
-            for h in range(1, n_dev):
-                cap = sched.hops[d][h - 1]
-                assert cap % pad == 0 or cap == 0
-                for k in range(n_dev):
-                    moved = int(np.sum((src == k)
-                                       & (dst == (k + h) % n_dev)))
-                    assert moved <= cap, (d, h, k, moved, cap)
-        slocs = [p.padded_nnz // n_dev for p in t.plans]
-        rows = exchange_bytes(sched, n, slocs)
-        for d, r in enumerate(rows):
-            assert r["permute_bytes"] == \
-                sched.permute_slots(d) * row_bytes(n)
-            # the baseline gathers each remote device's mode-d list
-            assert r["all_gather_bytes"] == \
-                (n_dev - 1) * slocs[d] * row_bytes(n)
-            # the whole point: the schedule ships (far) fewer bytes
-            assert r["permute_bytes"] <= r["all_gather_bytes"]
-    with pytest.raises(ValueError, match="not divisible"):
-        schedule_for_plans(t.plans, 3)
+    for schedule in ("compact", "rect"):
+        t = build_sharded_flycoo(idx, val, dims, n_dev=4, rows_pp=8,
+                                 block_p=8, schedule=schedule)
+        for p in t.plans:
+            assert p.kappa % 4 == 0
+        for n_dev, pad in ((2, 8), (4, 4)):
+            sched = schedule_for_plans(t.plans, n_dev, pad_hop=pad)
+            assert sched.n_dev == n_dev
+            assert len(sched.hops) == n
+            for d in range(n):
+                src = element_devices(t.plans[d], n_dev)
+                dst = element_devices(t.plans[(d + 1) % n], n_dev)
+                if schedule == "rect":
+                    # rect: device ownership degenerates to the slot stride
+                    np.testing.assert_array_equal(
+                        src, t.plans[d].slot_of_elem
+                        // (t.plans[d].padded_nnz // n_dev))
+                assert len(sched.hops[d]) == n_dev - 1
+                for h in range(1, n_dev):
+                    cap = sched.hops[d][h - 1]
+                    assert cap % pad == 0 or cap == 0
+                    for k in range(n_dev):
+                        moved = int(np.sum((src == k)
+                                           & (dst == (k + h) % n_dev)))
+                        assert moved <= cap, (d, h, k, moved, cap)
+            slocs = [p.padded_nnz // n_dev for p in t.plans]
+            rows = exchange_bytes(sched, n, slocs)
+            for d, r in enumerate(rows):
+                assert r["permute_bytes"] == \
+                    sched.permute_slots(d) * row_bytes(n)
+                # the baseline gathers each remote device's mode-d list
+                assert r["all_gather_bytes"] == \
+                    (n_dev - 1) * slocs[d] * row_bytes(n)
+                # the whole point: the schedule ships (far) fewer bytes
+                assert r["permute_bytes"] <= r["all_gather_bytes"]
+        with pytest.raises(ValueError, match="not divisible"):
+            schedule_for_plans(t.plans, 3)
+
+
+def test_dist_compact_matches_rect_bitwise():
+    """Device-major numbering over the compact layout: the distributed
+    rotation on a skewed tensor is bitwise-identical to the rect-schedule
+    baseline (and to the single-device compact engine), while using fewer
+    local slots per device."""
+    out = run_sub("""
+        from repro import engine
+        from repro.core import datasets, init_factors
+        from repro.core.distributed import build_sharded_flycoo
+        from repro.launch.mesh import make_mesh
+
+        dims = (48, 36, 24)
+        ts = datasets.TensorSpec(name="zipf", dims=dims, nnz=2500,
+                                 zipf_a=1.5)
+        idx, val = datasets.synthesize(ts, seed=3)
+        factors = tuple(init_factors(jax.random.PRNGKey(1), dims, 8))
+        mesh = make_mesh((4,), ("data",))
+        states, douts, slocs = {}, {}, {}
+        for schedule in ("compact", "rect"):
+            t = build_sharded_flycoo(idx, val, dims, n_dev=4, rows_pp=4,
+                                     block_p=8, schedule=schedule)
+            state = engine.init(t)
+            outs_1d, _ = engine.all_modes(state, factors)
+            ds = engine.dist.shard_state(state, mesh)
+            slocs[schedule] = ds.smax_loc
+            acc = []
+            for sweep in range(2):
+                outs, ds = engine.dist.dist_all_modes(ds, factors)
+                acc += [np.asarray(o) for o in outs]
+            douts[schedule] = acc
+            for d in range(3):  # dist == single-device, bitwise
+                np.testing.assert_array_equal(acc[d],
+                                              np.asarray(outs_1d[d]))
+        for a, b in zip(douts["compact"], douts["rect"]):
+            np.testing.assert_array_equal(a, b)
+        assert slocs["compact"] < slocs["rect"], slocs
+        print("DIST_COMPACT_OK", slocs)
+    """, devices=4)
+    assert "DIST_COMPACT_OK" in out
 
 
 def test_sharded_train_step_matches_single_device():

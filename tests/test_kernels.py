@@ -95,6 +95,124 @@ def test_mttkrp_fused_remap_scatters_next_layout(kappa, rows_pp, blocks_pp,
     np.testing.assert_array_equal(np.asarray(nalpha), ealpha)
 
 
+# --------------------------------------------------------------------------
+# Compact (descriptor-driven) kernels with in-block row dedup.
+# --------------------------------------------------------------------------
+def _compact_case(seed, kappa, part_blocks, p, nm1, r, hot_rows=4):
+    """Random compact-schedule inputs: a descriptor with the given per-
+    partition block counts, Zipf-ish factor rows (few hot rows so blocks
+    dedup), dedup tables from the shared host-side builder, and the
+    composed descriptor-aware oracle."""
+    from repro.core.flycoo import _ROW_SENTINEL, dedup_tables_from_rows
+
+    rng = np.random.default_rng(seed)
+    assert len(part_blocks) == kappa
+    nblocks = sum(part_blocks)
+    s = nblocks * p
+    bpart = np.repeat(np.arange(kappa), part_blocks).astype(np.int32)
+    rows_pp = 8
+    dims_in = [int(rng.integers(8, 40)) for _ in range(nm1)]
+    facs = tuple(jnp.asarray(rng.standard_normal((d, r)).astype(np.float32))
+                 for d in dims_in)
+    # skewed row choices: sample from a few hot rows most of the time
+    lidx = np.stack([
+        np.where(rng.random(s) < 0.7,
+                 rng.integers(0, min(hot_rows, d), s),
+                 rng.integers(0, d, s))
+        for d in dims_in]).astype(np.int64)
+    lrow = rng.integers(-1, rows_pp, s).astype(np.int32)
+    val = rng.standard_normal(s).astype(np.float32)
+    val[lrow < 0] = 0.0
+    uidx, upos, nuniq = [], [], []
+    for w in range(nm1):
+        rows = np.where(lrow < 0, _ROW_SENTINEL, lidx[w])
+        u, pos, nun = dedup_tables_from_rows(rows, nblocks, p)
+        uidx.append(u)
+        upos.append(pos)
+        nuniq.append(nun)
+    uidx, upos, nuniq = (np.stack(uidx), np.stack(upos, axis=1),
+                         np.stack(nuniq))
+    gathered = jnp.stack([facs[w][lidx[w]] for w in range(nm1)], axis=1)
+    exp = ref.mttkrp_fused_compact_ref(
+        gathered, jnp.asarray(val), jnp.asarray(lrow), jnp.asarray(bpart),
+        kappa=kappa, rows_pp=rows_pp, block_p=p)
+    return dict(facs=facs, bpart=jnp.asarray(bpart),
+                uidx=jnp.asarray(uidx), upos=jnp.asarray(upos),
+                nuniq=jnp.asarray(nuniq), gathered=gathered,
+                val=jnp.asarray(val), lrow=jnp.asarray(lrow), exp=exp,
+                kappa=kappa, rows_pp=rows_pp, nblocks=nblocks, p=p,
+                nm1=nm1, nuniq_np=nuniq, lidx=lidx)
+
+
+@pytest.mark.parametrize("kappa,part_blocks,p", [
+    (2, (3, 1), 8), (4, (1, 4, 2, 1), 16), (3, (2, 1, 5), 32),
+])
+@pytest.mark.parametrize("nm1,r", [(2, 8), (3, 32), (5, 16)])
+def test_mttkrp_fused_compact_shapes(kappa, part_blocks, p, nm1, r):
+    """Descriptor-driven 1-D grid == descriptor-aware oracle on skewed,
+    deliberately unbalanced per-partition block counts."""
+    c = _compact_case(kappa * 10 + p, kappa, part_blocks, p, nm1, r)
+    out = ops.mttkrp_fused_compact(
+        c["gathered"], c["val"], c["lrow"], c["bpart"], kappa=c["kappa"],
+        rows_pp=c["rows_pp"], nblocks=c["nblocks"], block_p=c["p"],
+        interpret=True)
+    np.testing.assert_allclose(out, c["exp"], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("kappa,part_blocks,p", [
+    (2, (3, 1), 8), (4, (1, 4, 2, 1), 16), (3, (2, 1, 5), 32),
+])
+@pytest.mark.parametrize("nm1,r", [(2, 8), (3, 32), (5, 16)])
+def test_mttkrp_fused_gather_compact_dedup(kappa, part_blocks, p, nm1, r):
+    """In-kernel dedup gather (U <= P row DMAs + one-hot stage select)
+    == XLA gather + oracle; the dedup tables actually dedup (hot rows)."""
+    c = _compact_case(kappa * 7 + nm1, kappa, part_blocks, p, nm1, r)
+    assert int(c["nuniq_np"].sum()) < c["nblocks"] * c["p"] * c["nm1"]
+    out = ops.mttkrp_fused_gather_compact(
+        c["val"], c["lrow"], c["upos"], c["bpart"], c["uidx"], c["nuniq"],
+        c["facs"], kappa=c["kappa"], rows_pp=c["rows_pp"],
+        nblocks=c["nblocks"], block_p=c["p"], interpret=True)
+    np.testing.assert_allclose(out, c["exp"], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("kappa,part_blocks,p,nm1,r", [
+    (2, (3, 1), 8, 2, 8), (3, (2, 1, 3), 16, 3, 32),
+])
+def test_mttkrp_fused_remap_compact_scatters_next_layout(kappa, part_blocks,
+                                                         p, nm1, r):
+    """The compact remap variant returns the EC result AND the mode-(d+1)
+    layout, matching the XLA scatter the scan step would issue."""
+    c = _compact_case(13 * kappa + p, kappa, part_blocks, p, nm1, r)
+    rng = np.random.default_rng(p + nm1)
+    s = c["nblocks"] * c["p"]
+    n = nm1 + 1
+    smax = s + 24
+    lrow = np.asarray(c["lrow"])
+    alive = lrow >= 0
+    idx = rng.integers(0, 50, (s, n)).astype(np.int32)
+    alpha = np.full((s, n), -1, np.int32)
+    alpha[alive] = rng.integers(0, smax, (int(alive.sum()), n))
+    alpha[alive, 1] = rng.permutation(smax)[: int(alive.sum())]
+    dst = alpha[:, 1]
+
+    out, nval, nidx, nalpha = ops.mttkrp_fused_remap_compact(
+        c["val"], jnp.asarray(idx), jnp.asarray(alpha), c["lrow"],
+        c["upos"], c["bpart"], c["uidx"], c["nuniq"], c["facs"],
+        kappa=c["kappa"], rows_pp=c["rows_pp"], nblocks=c["nblocks"],
+        block_p=c["p"], smax=smax, next_mode=1, interpret=True)
+    np.testing.assert_allclose(out, c["exp"], rtol=1e-4, atol=1e-4)
+
+    eval_ = np.zeros(smax, np.float32)
+    eidx = np.zeros((smax, n), np.int32)
+    ealpha = np.full((smax, n), -1, np.int32)
+    eval_[dst[alive]] = np.asarray(c["val"])[alive]
+    eidx[dst[alive]] = idx[alive]
+    ealpha[dst[alive]] = alpha[alive]
+    np.testing.assert_allclose(np.asarray(nval), eval_)
+    np.testing.assert_array_equal(np.asarray(nidx), eidx)
+    np.testing.assert_array_equal(np.asarray(nalpha), ealpha)
+
+
 @pytest.mark.parametrize("b,t,d,chunk", [
     (1, 32, 8, 8), (2, 64, 16, 16), (3, 128, 32, 32), (2, 64, 128, 64),
 ])

@@ -20,12 +20,13 @@ def _random_coo(rng, dims, nnz):
 
 @settings(max_examples=25, deadline=None)
 @given(dim=st.integers(4, 200), nnz=st.integers(10, 2000),
-       kappa=st.integers(1, 16), seed=st.integers(0, 999))
-def test_remap_ids_are_unique(dim, nnz, kappa, seed):
+       kappa=st.integers(1, 16), seed=st.integers(0, 999),
+       schedule=st.sampled_from(["compact", "rect"]))
+def test_remap_ids_are_unique(dim, nnz, kappa, seed, schedule):
     """Observation 1: remap ids are unique per mode => scatter conflict-free."""
     rng = np.random.default_rng(seed)
     idx = rng.integers(0, dim, nnz).astype(np.int64)
-    plan = plan_mode(idx, dim, 0, kappa=kappa)
+    plan = plan_mode(idx, dim, 0, kappa=kappa, schedule=schedule)
     slots = plan.slot_of_elem
     assert len(np.unique(slots)) == len(slots)
     assert slots.max() < plan.padded_nnz
@@ -33,16 +34,22 @@ def test_remap_ids_are_unique(dim, nnz, kappa, seed):
 
 @settings(max_examples=25, deadline=None)
 @given(dim=st.integers(4, 200), nnz=st.integers(10, 2000),
-       kappa=st.integers(1, 16), seed=st.integers(0, 999))
-def test_row_ownership(dim, nnz, kappa, seed):
-    """Observation 2: all elements of a row land in that row's partition."""
+       kappa=st.integers(1, 16), seed=st.integers(0, 999),
+       schedule=st.sampled_from(["compact", "rect"]))
+def test_row_ownership(dim, nnz, kappa, seed, schedule):
+    """Observation 2: all elements of a row land in that row's partition
+    (the owning partition is the block descriptor lookup — which under
+    ``rect`` must agree with the fixed slot stride)."""
     rng = np.random.default_rng(seed)
     idx = rng.integers(0, dim, nnz).astype(np.int64)
-    plan = plan_mode(idx, dim, 0, kappa=kappa)
-    stride = plan.blocks_pp * plan.block_p
-    part_of_elem = plan.slot_of_elem // stride
+    plan = plan_mode(idx, dim, 0, kappa=kappa, schedule=schedule)
+    part_of_elem = plan.block_part[plan.slot_of_elem // plan.block_p]
     part_of_row = plan.row_relabel // plan.rows_pp
     np.testing.assert_array_equal(part_of_elem, part_of_row[idx])
+    if schedule == "rect":
+        stride = plan.blocks_pp * plan.block_p
+        np.testing.assert_array_equal(part_of_elem,
+                                      plan.slot_of_elem // stride)
 
 
 @settings(max_examples=25, deadline=None)
@@ -100,3 +107,87 @@ def test_high_mode_support(nmodes):
     t = build_flycoo(idx, val, dims, rows_pp=8, block_p=16)
     assert t.nmodes == nmodes
     assert all(p.kappa >= 1 for p in t.plans)
+
+
+# --------------------------------------------------------------------------
+# Compact block schedule + load-balance reporting + dedup tables.
+# --------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(dim=st.integers(8, 300), nnz=st.integers(20, 3000),
+       kappa=st.integers(1, 16), seed=st.integers(0, 999),
+       zipf_a=st.floats(1.1, 3.0))
+def test_compact_padded_leq_rect(dim, nnz, kappa, seed, zipf_a):
+    """The compact schedule never uses more slots than the rectangular
+    one, with equality exactly when every partition needs the same block
+    count (balanced partitions)."""
+    rng = np.random.default_rng(seed)
+    raw = rng.zipf(zipf_a, nnz)
+    idx = ((raw - 1) % dim).astype(np.int64)
+    compact = plan_mode(idx, dim, 0, kappa=kappa, schedule="compact")
+    rect = plan_mode(idx, dim, 0, kappa=kappa, schedule="rect")
+    assert compact.padded_nnz <= rect.padded_nnz
+    blocks = np.maximum(1, np.ceil(compact.part_nnz / compact.block_p))
+    balanced = blocks.min() == blocks.max()
+    assert (compact.padded_nnz == rect.padded_nnz) == balanced
+    # both schedules describe the same partition assignment
+    np.testing.assert_array_equal(compact.part_nnz, rect.part_nnz)
+    # descriptor invariants: nondecreasing, every partition >= 1 block
+    assert (np.diff(compact.block_part) >= 0).all()
+    assert len(np.unique(compact.block_part)) == compact.kappa
+
+
+def test_load_balance_reports_opt_lower_bound():
+    """The documented bound is OPT >= max(mean, d_max): with one dominant
+    vertex the max/mean ratio explodes, but the achieved-vs-OPT imbalance
+    must stay ~1 (no schedule can split a single vertex's hyperedges)."""
+    dim, kappa = 64, 8
+    idx = np.concatenate([np.zeros(1000, np.int64),
+                          np.arange(1, dim, dtype=np.int64)])
+    plan = plan_mode(idx, dim, 0, kappa=kappa)
+    lb = plan.load_balance()
+    assert lb["max_degree"] == 1000
+    assert lb["opt_lower_bound"] == max(lb["mean"], 1000.0)
+    assert lb["imbalance"] == pytest.approx(lb["max"] / 1000.0)
+    assert lb["imbalance"] <= 1.01           # dominated by the hot vertex
+    assert lb["imbalance_vs_mean"] > 5.0     # the old ratio overstates it
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 999), zipf_a=st.floats(1.1, 2.5),
+       block_p=st.sampled_from([8, 16, 32]))
+def test_dedup_tables_reconstruct_rows(seed, zipf_a, block_p):
+    """uidx/upos/nuniq invariants: every alive slot's factor row is
+    ``uidx[block, upos]``; per block the uniques are exactly the distinct
+    rows, counted by nuniq; dedup row copies never exceed per-slot ones."""
+    from repro.core import datasets
+
+    t = datasets.zipf_tensor((40, 30, 20), 900, a=zipf_a, seed=seed,
+                             rows_pp=8, block_p=block_p)
+    for d in range(t.nmodes):
+        plan = t.plans[d]
+        uidx, upos, nuniq = t.dedup_tables(d)
+        in_modes = [w for w in range(t.nmodes) if w != d]
+        slots = plan.slot_of_elem
+        blocks = slots // plan.block_p
+        for k, w in enumerate(in_modes):
+            rows = t.indices[:, w].astype(np.int64)
+            # reconstruction: slot's row == unique table at its position
+            got = uidx[k, blocks * plan.block_p + upos[slots, k]]
+            np.testing.assert_array_equal(got, rows)
+            # per-block unique counts match the distinct row counts
+            for b in np.unique(blocks):
+                mask = blocks == b
+                assert nuniq[k, b] == len(np.unique(rows[mask]))
+            assert int(nuniq[k].sum()) <= plan.nblocks * plan.block_p
+
+
+def test_dma_row_model_dedups_hot_rows():
+    """On a skewed tensor the modeled dedup DMA rows are far below the
+    per-slot count (the hot-row re-fetch factor the kernel removes)."""
+    from repro.core import datasets
+
+    t = datasets.zipf_tensor((300, 200, 100), 20_000, a=1.5, seed=0,
+                             block_p=128)
+    m = t.dma_row_model(0)
+    assert m["dedup_rows"] < m["per_slot_rows"]
+    assert m["dedup_reduction_x"] >= 2.0
