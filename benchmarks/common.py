@@ -63,6 +63,14 @@ def emit(rows):
     _merge_json(records)
 
 
+def ensure_results_file() -> str:
+    """Create ``benchmarks/out/results.json`` (empty list) if absent, so
+    every run — even one where individual figures fail — leaves an
+    artifact CI can upload. Returns the path."""
+    _merge_json([])
+    return _JSON_PATH
+
+
 def _merge_json(records):
     try:
         os.makedirs(os.path.dirname(_JSON_PATH), exist_ok=True)

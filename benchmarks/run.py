@@ -17,12 +17,16 @@ import traceback
 
 
 def main() -> None:
-    from . import (fig5_remap_overhead, fig6_7_throughput, fig8_block_sweep,
-                   fig9_total_time, fig10_preprocessing, fig11_multi_device)
+    from . import (common, fig5_remap_overhead, fig6_7_throughput,
+                   fig8_block_sweep, fig9_total_time, fig10_preprocessing,
+                   fig11_multi_device)
 
     mods = [fig5_remap_overhead, fig6_7_throughput, fig8_block_sweep,
             fig9_total_time, fig10_preprocessing, fig11_multi_device]
     failed = []
+    # the perf trail must exist even if every figure below fails — CI
+    # uploads it as an artifact unconditionally
+    common.ensure_results_file()
     print("name,us_per_call,derived")
     for mod in mods:
         try:

@@ -1,78 +1,127 @@
-"""§Perf Phase-2 hillclimbs: three cells, hypothesis -> change -> measure.
+"""Plan-space hillclimbs: hypothesis -> change -> measure, per dataset cell.
 
-Run AFTER the baseline sweep:  PYTHONPATH=src python experiments/hillclimb.py
-Writes experiments/hillclimb/<cell>__<opt>.json; report renders the log.
+The measurement backend of the plan autotuner
+(``repro.engine.autotune``): each cell is a synthetic tensor x a
+``PlanSpace``; the tuner's analytic+exact stages pick a starting spec and
+the measured greedy hill-climb walks single-knob neighbors, timing the
+real jitted ``all_modes`` dispatch. Deterministic under the cell's seed.
+
+Run:  PYTHONPATH=src python experiments/hillclimb.py
+Writes experiments/hillclimb/<cell>.json; benchmarks/fig10 reads the
+chosen knobs back when recording autotuned-plan timings.
+
+Env knobs (CI smoke uses tiny values): HILL_CELLS, HILL_NNZ, HILL_RANK,
+HILL_ITERS, HILL_SEED.
 """
 import dataclasses
 import json
 import os
 import sys
+import time
+
+import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-from repro.launch.dryrun import lower_cell_with_variants  # noqa: E402
-from repro.configs import get_config                       # noqa: E402
+import repro.engine as engine                              # noqa: E402
+from repro.core import datasets                            # noqa: E402
+from repro.core.plancache import PlanCache                 # noqa: E402
+from repro.engine import PlanSpace, PlanSpec, make_engine  # noqa: E402
+from repro.engine.autotune import autotune                 # noqa: E402
 
 OUT = os.path.join(os.path.dirname(__file__), "hillclimb")
-os.makedirs(OUT, exist_ok=True)
 
-EXPERIMENTS = [
-    # (arch, shape, tag, cfg-transform, cast_once)
-    ("tinyllama-1.1b", "train_4k", "cast_once", None, True),
-    ("tinyllama-1.1b", "train_4k", "no_sp",
-     lambda c: dataclasses.replace(c, seq_shard_carry=False), False),
-    ("tinyllama-1.1b", "train_4k", "no_sp_cast",
-     lambda c: dataclasses.replace(c, seq_shard_carry=False), True),
-    ("command-r-plus-104b", "train_4k", "cast_once", None, True),
-    ("qwen2.5-3b", "decode_32k", "kv_quant",
-     lambda c: dataclasses.replace(c, kv_quant=True), False),
+NNZ = int(os.environ.get("HILL_NNZ", 50_000))
+RANK = int(os.environ.get("HILL_RANK", 16))
+ITERS = int(os.environ.get("HILL_ITERS", 3))
+SEED = int(os.environ.get("HILL_SEED", 0))
+
+# (cell name, dims, zipf skew) — the skew sweep is the hypothesis axis:
+# dedup + compact should win as skew grows, rect should only ever win flat.
+CELLS = [
+    ("zipf_skew_low", (4000, 3000, 2000), 1.1),
+    ("zipf_skew_mid", (4000, 3000, 2000), 1.5),
+    ("zipf_skew_high", (4000, 3000, 2000), 2.0),
 ]
 
 
+def plan_space() -> PlanSpace:
+    return PlanSpace(
+        backend=("pallas_fused",),
+        schedule=("compact", "rect"),
+        block_p=(64, 128, 256),
+        dedup=(True, False),
+        base=PlanSpec(backend="pallas_fused"),
+    )
+
+
+def measure_spec(spec: PlanSpec, coo, factors, iters: int = ITERS,
+                 cache: PlanCache | None = None) -> float:
+    """Median wall time of one jitted ``all_modes`` sweep under ``spec``
+    (compile excluded via warmup; plans served through ``cache``)."""
+    state = make_engine(coo, spec, cache=cache)
+    outs, state = engine.all_modes(state, factors)  # warmup: trace+compile
+    jax_block = getattr(outs[0], "block_until_ready", None)
+    times = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        outs, state = engine.all_modes(state, factors)
+        if jax_block is not None:
+            outs[0].block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def run_cell(name: str, dims, zipf_a: float, seed: int = SEED) -> dict:
+    t = datasets.zipf_tensor(dims, NNZ, a=zipf_a, seed=seed)
+    coo = (t.indices, t.values, t.dims)
+    rng = np.random.default_rng(seed)
+    factors = tuple(rng.standard_normal((d, RANK)).astype(np.float32)
+                    for d in t.dims)
+    cache = PlanCache()
+    result = autotune(
+        t.indices, t.values, t.dims, plan_space(), seed=seed, cache=cache,
+        measure=lambda spec: measure_spec(spec, coo, factors, cache=cache))
+    return {
+        "cell": name,
+        "dims": list(dims),
+        "nnz": t.nnz,
+        "zipf_a": zipf_a,
+        "seed": seed,
+        "best": dataclasses.asdict(result.best),
+        "default": dataclasses.asdict(result.default),
+        "modeled": {repr(s): c for s, c in result.modeled.items()},
+        "measured_s": {repr(s): v for s, v in result.measured.items()},
+        "trace": [{**step, "spec": dataclasses.asdict(step["spec"])}
+                  for step in result.trace],
+        "plan_cache": cache.stats(),
+        "ok": True,
+    }
+
+
 def main():
-    for arch, shape, tag, tf, cast in EXPERIMENTS:
-        path = os.path.join(OUT, f"{arch}__{shape}__{tag}.json")
+    os.makedirs(OUT, exist_ok=True)
+    only = os.environ.get("HILL_CELLS")
+    for name, dims, zipf_a in CELLS:
+        if only and name not in only.split(","):
+            continue
+        path = os.path.join(OUT, f"{name}.json")
         if os.path.exists(path):
             print("cached", path)
             continue
-        cfg = get_config(arch)
-        if tf is not None:
-            cfg = tf(cfg)
         try:
-            rec = lower_cell_with_variants(arch, shape, cfg=cfg,
-                                           cast_once=cast)
-            rec["opt_tag"] = tag
-            rec["ok"] = True
-            print(f"OK {arch} {shape} {tag}: peak "
-                  f"{rec['memory']['peak_per_device_gb']:.2f} GB "
-                  f"coll {rec['collectives_per_device']['total']/1e9:.2f} GB")
+            rec = run_cell(name, dims, zipf_a)
+            best = rec["best"]
+            print(f"OK {name}: best P={best['block_p']} "
+                  f"schedule={best['schedule']} dedup={best['dedup']} "
+                  f"({len(rec['trace']) - 1} hill-climb moves)")
         except Exception as e:
             import traceback
-            rec = {"ok": False, "error": str(e),
-                   "trace": traceback.format_exc()}
-            print("FAIL", arch, shape, tag, e)
+            rec = {"cell": name, "ok": False, "error": str(e),
+                   "trace_py": traceback.format_exc()}
+            print("FAIL", name, e)
         with open(path, "w") as f:
             json.dump(rec, f, indent=1)
 
 
 if __name__ == "__main__":
-    main()
-
-
-EXPERIMENTS_ROUND2 = [
-    # inference: SP carries cost a gather/layer but save nothing (no bwd)
-    ("recurrentgemma-9b", "prefill_32k", "no_sp_infer",
-     lambda c: dataclasses.replace(c, seq_shard_carry=False), False),
-    ("command-r-plus-104b", "prefill_32k", "no_sp_infer",
-     lambda c: dataclasses.replace(c, seq_shard_carry=False), False),
-    # int8 KV for the two decode cells closest to the HBM limit
-    ("command-r-plus-104b", "decode_32k", "kv_quant",
-     lambda c: dataclasses.replace(c, kv_quant=True), False),
-    ("qwen3-moe-235b-a22b", "decode_32k", "kv_quant",
-     lambda c: dataclasses.replace(c, kv_quant=True), False),
-]
-
-
-def round2():
-    global EXPERIMENTS
-    EXPERIMENTS = EXPERIMENTS_ROUND2
     main()

@@ -27,6 +27,35 @@ by the same kernel pass (``ExecutionConfig(fuse_remap=False)`` restores
 the XLA scatter path for comparison). ``backend="pallas"`` remains the
 unfused-gather baseline the paper's fusion argument is measured against.
 
+Plan factory, cache, and autotuner
+---------------------------------
+Raw COO -> running engine is one declarative call. A frozen
+``engine.PlanSpec`` names every searchable knob (backend, schedule,
+block_p, kappa policy, rows_pp, VMEM budget, dedup, fuse_remap,
+exchange) and ``engine.make_engine`` replaces the scattered
+build_flycoo/ExecutionConfig/shard_state plumbing:
+
+    from repro.engine import PlanSpec, PlanSpace, make_engine, autotune
+
+    state = make_engine((indices, values, dims),
+                        PlanSpec(backend="pallas_fused", block_p=256))
+    dstate = make_engine((indices, values, dims), spec, mesh=mesh)
+
+``make_engine`` routes layout construction through a host-side
+**plan cache** (:mod:`repro.core.plancache`) keyed on a sparsity
+signature (dims, nnz, quantized per-mode degree histograms): an
+identical element list is an identity hit (>= 10x faster than even the
+vectorized cold plan; CI-gated), a permuted one is a structural hit
+that rebuilds only ``slot_of_elem`` via ``plan_from_structure``, and
+cached plans are bitwise-equal to freshly built ones. Pass
+``cache=False`` to force a cold build, or your own ``PlanCache`` to
+scope eviction. ``engine.autotune.autotune(indices, values, dims,
+PlanSpace(...))`` searches the knob space per tensor: an analytic cost
+model over nnz-per-slice histograms ranks the space, exact modeled
+cost (pad slots + dedup DMA rows) picks the winner — never worse than
+the default spec — and an optional measured hill-climb refines it,
+deterministically under a fixed seed.
+
 Multi-device execution lives in :mod:`repro.engine.dist`: ``shard_state``
 places an ``EngineState`` over a mesh's ``data`` axis and
 ``dist_all_modes`` runs the rotation as one scanned ``shard_map`` program,

@@ -50,35 +50,53 @@ import numpy as np
 
 from .partition import DEFAULT_SCHEDULE, ModePlan, plan_mode
 
-_ROW_SENTINEL = np.iinfo(np.int64).max  # pad-slot marker; sorts last
+_ROW_SENTINEL = np.iinfo(np.int32).max  # pad-slot marker; sorts last
+
+
+def _dedup_tables_batched(rows: np.ndarray, nblocks: int, block_p: int):
+    """Build (uidx, upos, nuniq) for ``F`` factors' per-slot row lists.
+
+    ``rows`` is ``(F, S)`` integer with ``_ROW_SENTINEL`` marking pad
+    slots; ``S == nblocks * block_p``. Fully vectorized over factors *and*
+    blocks: sort each block's rows, mark firsts, compact the uniques to
+    the block's front, and record every slot's position among them. All
+    work happens on int32 (row ids are < 2^31 by the FLYCOO int32 index
+    contract) — the batched narrow path is the dedup half of the cold-plan
+    vectorization pass.
+    """
+    f = rows.shape[0]
+    s = nblocks * block_p
+    assert rows.shape == (f, s), (rows.shape, nblocks, block_p)
+    rb = np.ascontiguousarray(rows, dtype=np.int32).reshape(
+        f, nblocks, block_p)
+    # stability is irrelevant here: equal rows share one upos/uidx entry,
+    # so any permutation among equals yields identical tables
+    order = np.argsort(rb, axis=2)
+    srt = np.take_along_axis(rb, order, axis=2)
+    isnew = np.ones(srt.shape, dtype=bool)
+    isnew[:, :, 1:] = srt[:, :, 1:] != srt[:, :, :-1]
+    isnew &= srt != _ROW_SENTINEL          # sentinels are not unique rows
+    upos_sorted = np.maximum(
+        np.cumsum(isnew, axis=2, dtype=np.int32) - 1, 0)
+    upos = np.zeros(srt.shape, dtype=np.int32)
+    np.put_along_axis(upos, order, upos_sorted, axis=2)
+    upos[rb == _ROW_SENTINEL] = 0          # pad slots -> stage row 0
+    nuniq = isnew.sum(axis=2).astype(np.int32)
+    uidx = np.zeros(srt.shape, dtype=np.int32)
+    fix, bix, six = np.nonzero(isnew)
+    uidx[fix, bix, upos_sorted[fix, bix, six]] = srt[fix, bix, six]
+    return uidx.reshape(f, s), upos.reshape(f, s), nuniq
 
 
 def dedup_tables_from_rows(rows: np.ndarray, nblocks: int, block_p: int):
-    """Build (uidx, upos, nuniq) for one factor's per-slot row list.
+    """Single-factor wrapper over :func:`_dedup_tables_batched`.
 
-    ``rows`` is ``(S,)`` int64 with ``_ROW_SENTINEL`` marking pad slots;
-    ``S == nblocks * block_p``. Vectorized over blocks (no per-block Python
-    loop): sort each block's rows, mark firsts, compact the uniques to the
-    block's front, and record every slot's position among them.
+    ``rows`` is ``(S,)`` with ``_ROW_SENTINEL`` marking pad slots;
+    returns ``(uidx (S,), upos (S,), nuniq (nblocks,))`` int32.
     """
-    s = nblocks * block_p
-    assert rows.shape == (s,), (rows.shape, nblocks, block_p)
-    rb = rows.reshape(nblocks, block_p)
-    order = np.argsort(rb, axis=1, kind="stable")
-    srt = np.take_along_axis(rb, order, axis=1)
-    isnew = np.ones((nblocks, block_p), dtype=bool)
-    isnew[:, 1:] = srt[:, 1:] != srt[:, :-1]
-    isnew &= srt != _ROW_SENTINEL          # sentinels are not unique rows
-    upos_sorted = np.maximum(np.cumsum(isnew, axis=1) - 1, 0)
-    upos = np.zeros((nblocks, block_p), dtype=np.int64)
-    np.put_along_axis(upos, order, upos_sorted, axis=1)
-    upos[rb == _ROW_SENTINEL] = 0          # pad slots -> stage row 0
-    nuniq = isnew.sum(axis=1).astype(np.int32)
-    uidx = np.zeros((nblocks, block_p), dtype=np.int64)
-    bix, six = np.nonzero(isnew)
-    uidx[bix, upos_sorted[bix, six]] = srt[bix, six]
-    return (uidx.reshape(s).astype(np.int32),
-            upos.reshape(s).astype(np.int32), nuniq)
+    uidx, upos, nuniq = _dedup_tables_batched(
+        np.asarray(rows)[None, :], nblocks, block_p)
+    return uidx[0], upos[0], nuniq[0]
 
 
 @dataclasses.dataclass
@@ -93,6 +111,10 @@ class FlycooTensor:
     indices: np.ndarray           # (nnz, N) int32, canonical order
     values: np.ndarray            # (nnz,) float32, canonical order
     plans: list[ModePlan]
+    # per-mode dedup tables, built lazily once (engine init + dma_row_model
+    # + the autotuner's exact cost stage all consume the same tables)
+    _dedup_cache: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     @property
     def nmodes(self) -> int:
@@ -122,11 +144,14 @@ class FlycooTensor:
         dst[slots] = nxt.slot_of_elem.astype(np.int32)
         return {"val": val, "idx": idx, "lrow": lrow, "dst": dst}
 
-    def _slot_rows(self, d: int, w: int) -> np.ndarray:
-        """(S_d,) mode-``w`` factor row per mode-``d`` slot (sentinel pads)."""
+    def _slot_rows(self, d: int) -> np.ndarray:
+        """(N-1, S_d) int32 factor row per mode-``d`` slot for every input
+        mode ``w != d`` in ascending mode order (sentinel marks pads)."""
         plan = self.plans[d]
-        rows = np.full(plan.padded_nnz, _ROW_SENTINEL, dtype=np.int64)
-        rows[plan.slot_of_elem] = self.indices[:, w]
+        in_modes = [w for w in range(self.nmodes) if w != d]
+        rows = np.full((len(in_modes), plan.padded_nnz), _ROW_SENTINEL,
+                       dtype=np.int32)
+        rows[:, plan.slot_of_elem] = self.indices[:, in_modes].T
         return rows
 
     def dedup_tables(self, d: int):
@@ -135,17 +160,35 @@ class FlycooTensor:
         Returns ``(uidx (N-1, S_d) i32, upos (S_d, N-1) i32,
         nuniq (N-1, nblocks) i32)`` over the input modes ``w != d`` in
         ascending mode order (matching the kernels' factor operand order).
+        Built once per mode and memoized on the tensor.
+        """
+        cached = self._dedup_cache.get(d)
+        if cached is None:
+            plan = self.plans[d]
+            uidx, upos, nuniq = _dedup_tables_batched(
+                self._slot_rows(d), plan.nblocks, plan.block_p)
+            cached = (uidx, np.ascontiguousarray(upos.T), nuniq)
+            self._dedup_cache[d] = cached
+        return cached
+
+    def trivial_dedup_tables(self, d: int):
+        """Dedup-off tables in the same ``(uidx, upos, nuniq)`` encoding.
+
+        Every slot stages its own factor row (``upos = slot % P``,
+        ``nuniq = P`` everywhere, pad slots stage row 0), so the fused
+        compact kernels run unchanged but issue one row DMA per slot —
+        the ``dedup=False`` point of the plan space, letting the autotuner
+        price the dedup preprocessing against its DMA savings.
         """
         plan = self.plans[d]
-        in_modes = [w for w in range(self.nmodes) if w != d]
-        uidx, upos, nuniq = [], [], []
-        for w in in_modes:
-            u, p, n = dedup_tables_from_rows(self._slot_rows(d, w),
-                                             plan.nblocks, plan.block_p)
-            uidx.append(u)
-            upos.append(p)
-            nuniq.append(n)
-        return (np.stack(uidx), np.stack(upos, axis=1), np.stack(nuniq))
+        nm1 = self.nmodes - 1
+        rows = self._slot_rows(d)
+        uidx = np.where(rows == _ROW_SENTINEL, 0, rows)
+        upos = np.repeat(
+            (np.arange(plan.padded_nnz, dtype=np.int32)
+             % plan.block_p)[:, None], nm1, axis=1)
+        nuniq = np.full((nm1, plan.nblocks), plan.block_p, dtype=np.int32)
+        return uidx, upos, nuniq
 
     def dma_row_model(self, d: int) -> dict:
         """Modeled factor-row DMA copies for the mode-``d`` fused gather:
@@ -181,25 +224,45 @@ def build_flycoo(
     indices: np.ndarray,
     values: np.ndarray,
     dims: Sequence[int],
-    kappa: int | None = None,
+    kappa: int | Sequence[int] | None = None,
     rows_pp: int | None = None,
     block_p: int = 128,
     schedule: str = DEFAULT_SCHEDULE,
+    degrees: Sequence[np.ndarray] | None = None,
+    plans: Sequence[ModePlan] | None = None,
 ) -> FlycooTensor:
     """Preprocess a COO tensor into FLYCOO-TPU format (paper Sec. 5.7 cost:
     O(nnz log nnz) per mode, touching only nonzeros — never the index space).
+
+    ``kappa`` may be per-mode (a sequence) — the distributed factory path
+    rounds each mode's partition count to the device count. ``degrees``
+    (per-mode ``bincount`` vectors) lets the plan cache hand down the
+    histograms it already computed for its signature; ``plans`` skips
+    :func:`plan_mode` entirely (the cache-hit path — caller guarantees the
+    plans match this element list).
     """
     indices = np.ascontiguousarray(np.asarray(indices, dtype=np.int32))
     values = np.ascontiguousarray(np.asarray(values, dtype=np.float32))
     assert indices.ndim == 2 and indices.shape[0] == values.shape[0]
     n = indices.shape[1]
     assert len(dims) == n and n >= 3, "paper targets tensors of mode >= 3"
-    for d in range(n):
-        assert indices[:, d].min(initial=0) >= 0
-        assert indices[:, d].max(initial=0) < dims[d]
-    plans = [
-        plan_mode(indices[:, d], int(dims[d]), d, kappa=kappa,
-                  rows_pp=rows_pp, block_p=block_p, schedule=schedule)
-        for d in range(n)
-    ]
+    if plans is None:
+        # one transposed copy so every mode's plan reads a contiguous column
+        idx_t = np.ascontiguousarray(indices.T)
+        for d in range(n):
+            assert idx_t[d].min(initial=0) >= 0
+            assert idx_t[d].max(initial=0) < dims[d]
+        kappas = ([kappa] * n if kappa is None or np.isscalar(kappa)
+                  else list(kappa))
+        plans = [
+            plan_mode(idx_t[d], int(dims[d]), d, kappa=kappas[d],
+                      rows_pp=rows_pp, block_p=block_p, schedule=schedule,
+                      degrees=None if degrees is None else degrees[d])
+            for d in range(n)
+        ]
+    else:
+        # cache-hit path: caller (the plan cache) guarantees the plans
+        # match this element list — skip the O(nnz) validation rescan
+        plans = list(plans)
+        assert len(plans) == n
     return FlycooTensor(tuple(int(x) for x in dims), indices, values, plans)

@@ -1,0 +1,210 @@
+"""Host-side plan cache keyed on a tensor sparsity signature.
+
+The fig10 preprocessing wall is ``build_flycoo``: every mode pays a degree
+sort plus a partition sort over the nonzeros. In the streaming regime
+(AMPED, arxiv 2507.15121) the same tensor — or a reordered/re-sampled
+tensor with the *same sparsity structure* — is decomposed repeatedly, so
+re-planning from scratch is pure waste. This module caches ``ModePlan``
+lists and serves them back at three levels:
+
+``hit`` (identity)
+    The exact same element list (bitwise-equal ``indices``) was planned
+    before under the same knobs: the cached plans are returned verbatim.
+    Cost is one ``memcmp``-speed array compare — no histogram, no sort.
+    This is the >= 10x path CI gates.
+
+``structural`` (signature)
+    A *permutation* of a previously planned tensor (same per-mode degree
+    vectors, different element order): everything order-invariant — the
+    degree sort, the cyclic deal, the relabeling, the block layout — is
+    reused and only ``slot_of_elem`` is rebuilt
+    (:func:`repro.core.partition.plan_from_structure`). The result is
+    bitwise-equal to a cold plan of the reordered list (property-tested).
+
+``miss``
+    Cold :func:`repro.core.flycoo.build_flycoo`, with the per-mode degree
+    histograms the cache computed for its signature handed down so the
+    cold path never re-counts.
+
+The **sparsity signature** is ``(dims, nnz, per-mode quantized degree
+histograms)`` — the histogram buckets nnz-per-slice counts by
+``floor(log2(degree))``, so it is invariant under nnz-order permutation
+and cheap to compare; structural hits are then *verified* by exact
+per-mode degree equality before any plan is reused (each mode's plan
+structure is a function of that mode's degree vector alone, so equality
+is sufficient for bitwise-correct reuse).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .flycoo import FlycooTensor, build_flycoo
+from .partition import ModePlan, plan_from_structure
+
+
+def sparsity_signature(
+    indices: np.ndarray,
+    dims: Sequence[int],
+    degrees: Sequence[np.ndarray] | None = None,
+) -> tuple:
+    """Permutation-invariant sparsity signature of a COO tensor.
+
+    ``(dims, nnz, per-mode histogram of floor(log2(degree)) buckets)`` as
+    a nested tuple (hashable — usable as a dict key). Tensors that differ
+    in dims, nnz, or any mode's quantized nnz-per-slice histogram are
+    guaranteed distinct; equal signatures are a *candidate* match only
+    (the cache verifies exact degree equality before reuse).
+    """
+    indices = np.asarray(indices)
+    nnz, n = indices.shape
+    if degrees is None:
+        degrees = [np.bincount(indices[:, d], minlength=int(dims[d]))
+                   for d in range(n)]
+    hists = []
+    for d in range(n):
+        deg = degrees[d]
+        pos = deg[deg > 0]
+        # bucket by floor(log2(degree)): 64 buckets cover any int64 degree
+        buckets = np.bincount(
+            np.log2(pos.astype(np.float64)).astype(np.int64), minlength=1)
+        hists.append(tuple(int(c) for c in buckets))
+    return (tuple(int(x) for x in dims), int(nnz), tuple(hists))
+
+
+@dataclasses.dataclass
+class _Entry:
+    """One cached element list: its indices (for the identity compare),
+    per-mode degrees (for structural verification + cold-path handdown),
+    and plans per knob setting."""
+
+    indices: np.ndarray                       # (nnz, N) int32 canonical
+    degrees: list[np.ndarray]                 # per-mode bincounts
+    hist_key: tuple                           # quantized-histogram part
+    plans: dict[tuple, list[ModePlan]]        # knob key -> per-mode plans
+
+
+class PlanCache:
+    """In-process plan cache; see module docstring for the three levels.
+
+    ``get_tensor`` is a drop-in for :func:`build_flycoo`; inspect
+    ``last_outcome`` (``"hit" | "structural" | "miss"``) and the
+    ``hits/structural_hits/misses`` counters for cache behavior.
+    """
+
+    def __init__(self, max_entries: int = 32):
+        self.max_entries = max_entries
+        self._by_key: dict[tuple, list[_Entry]] = {}
+        self._order: list[tuple] = []          # FIFO eviction
+        self.hits = 0
+        self.structural_hits = 0
+        self.misses = 0
+        self.last_outcome: str | None = None
+
+    # ------------------------------------------------------------------ api
+    def get_tensor(
+        self,
+        indices: np.ndarray,
+        values: np.ndarray,
+        dims: Sequence[int],
+        kappa: int | Sequence[int] | None = None,
+        rows_pp: int | None = None,
+        block_p: int = 128,
+        schedule: str = "compact",
+    ) -> FlycooTensor:
+        indices = np.ascontiguousarray(np.asarray(indices, dtype=np.int32))
+        dims_t = tuple(int(x) for x in dims)
+        nnz = int(indices.shape[0])
+        key = (dims_t, nnz)
+        knob_kappa = (kappa if kappa is None or np.isscalar(kappa)
+                      else tuple(int(k) for k in kappa))
+        knobs = (knob_kappa, rows_pp, int(block_p), schedule)
+        entries = self._by_key.get(key, [])
+
+        # -- level 1: identity hit (bitwise-equal element list) ----------
+        for e in entries:
+            if e.indices is indices or np.array_equal(e.indices, indices):
+                plans = e.plans.get(knobs)
+                if plans is not None:
+                    self.hits += 1
+                    self.last_outcome = "hit"
+                    return build_flycoo(indices, values, dims_t,
+                                        plans=plans)
+                # known structure under new knobs: cold-plan but reuse
+                # the degree histograms (skips every bincount)
+                t = build_flycoo(indices, values, dims_t, kappa=kappa,
+                                 rows_pp=rows_pp, block_p=block_p,
+                                 schedule=schedule, degrees=e.degrees)
+                e.plans[knobs] = t.plans
+                self.misses += 1
+                self.last_outcome = "miss"
+                return t
+
+        # -- level 2: structural hit (same degrees, new element order) ---
+        idx_t = np.ascontiguousarray(indices.T)
+        degrees = [np.bincount(idx_t[d], minlength=dims_t[d])
+                   for d in range(indices.shape[1])]
+        _, _, hist_key = sparsity_signature(indices, dims_t,
+                                            degrees=degrees)
+        for e in entries:
+            if e.hist_key != hist_key:
+                continue
+            if not all(np.array_equal(a, b)
+                       for a, b in zip(e.degrees, degrees)):
+                continue
+            base = e.plans.get(knobs)
+            if base is None:
+                continue
+            plans = [plan_from_structure(idx_t[d], base[d])
+                     for d in range(indices.shape[1])]
+            self._insert(key, _Entry(indices, e.degrees, hist_key,
+                                     {knobs: plans}))
+            self.structural_hits += 1
+            self.last_outcome = "structural"
+            return build_flycoo(indices, values, dims_t, plans=plans)
+
+        # -- level 3: miss (cold plan; degrees handed down) --------------
+        t = build_flycoo(indices, values, dims_t, kappa=kappa,
+                         rows_pp=rows_pp, block_p=block_p,
+                         schedule=schedule, degrees=degrees)
+        self._insert(key, _Entry(t.indices, degrees, hist_key,
+                                 {knobs: t.plans}))
+        self.misses += 1
+        self.last_outcome = "miss"
+        return t
+
+    def stats(self) -> dict:
+        return {
+            "hits": self.hits,
+            "structural_hits": self.structural_hits,
+            "misses": self.misses,
+            "entries": sum(len(v) for v in self._by_key.values()),
+        }
+
+    def clear(self) -> None:
+        self._by_key.clear()
+        self._order.clear()
+
+    # ------------------------------------------------------------- internal
+    def _insert(self, key: tuple, entry: _Entry) -> None:
+        self._by_key.setdefault(key, []).append(entry)
+        self._order.append(key)
+        while len(self._order) > self.max_entries:
+            old = self._order.pop(0)
+            bucket = self._by_key.get(old)
+            if bucket:
+                bucket.pop(0)
+                if not bucket:
+                    del self._by_key[old]
+
+
+#: Process-wide default cache (``repro.engine.factory.make_engine`` uses it
+#: unless handed an explicit one).
+DEFAULT_CACHE = PlanCache()
+
+
+def cached_build_flycoo(indices, values, dims, **knobs) -> FlycooTensor:
+    """:func:`build_flycoo` through :data:`DEFAULT_CACHE`."""
+    return DEFAULT_CACHE.get_tensor(indices, values, dims, **knobs)

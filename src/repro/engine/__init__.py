@@ -26,6 +26,32 @@ Public surface:
                                    multi-device subsystem: EngineState sharded
                                    under shard_map, remap exchanged via a
                                    static collective_permute schedule
+  PlanSpec / PlanSpace / make_engine
+                                   declarative plan+backend factory: one
+                                   frozen spec naming every searchable knob
+                                   (backend, schedule, block_p, kappa
+                                   policy, rows_pp, vmem budget, dedup,
+                                   fuse_remap, exchange), canonicalized and
+                                   enumerable as a ``PlanSpace``;
+                                   ``make_engine(tensor_or_coo, spec)``
+                                   builds the FLYCOO layout (through the
+                                   sparsity-signature ``PlanCache`` by
+                                   default) and returns a ready
+                                   ``EngineState`` — pass ``mesh=`` to get a
+                                   sharded ``DistState`` instead
+  autotune (analytic_cost / modeled_cost / autotune / hill_climb)
+                                   cost-model-guided knob search over a
+                                   PlanSpace: analytic nnz-histogram ranking
+                                   prunes the space, exact modeled cost (pad
+                                   slots + dedup DMA rows) picks the winner,
+                                   optional measured greedy hill-climb;
+                                   deterministic under a fixed seed and never
+                                   worse than the default spec on modeled
+                                   cost
+  ExecutionConfig(dedup=False)     keeps the compact schedule but feeds the
+                                   fused kernels trivial identity dedup
+                                   tables — an autotunable knob for tensors
+                                   whose blocks have no row reuse
 
 Migration from the deprecated stateful executor:
 
@@ -45,6 +71,8 @@ from .api import (init, mttkrp, all_modes, scan_jaxpr, reset_counters,
 from . import dist
 from .dist import (DistConfig, DistState, ExchangeSchedule, shard_state,
                    dist_mttkrp, dist_all_modes)
+from .factory import PlanSpec, PlanSpace, make_engine, SPACE_DIMS
+from . import autotune
 
 __all__ = [
     "ExecutionConfig", "KAPPA_POLICIES", "SCHEDULES",
@@ -54,4 +82,5 @@ __all__ = [
     "reset_counters", "TRACE_COUNTS", "DISPATCH_COUNTS", "FoldFn",
     "dist", "DistConfig", "DistState", "ExchangeSchedule", "shard_state",
     "dist_mttkrp", "dist_all_modes",
+    "PlanSpec", "PlanSpace", "make_engine", "SPACE_DIMS", "autotune",
 ]

@@ -58,17 +58,19 @@ def reset_counters() -> None:
 # init
 # --------------------------------------------------------------------------
 def init(tensor, config: ExecutionConfig | None = None,
-         start_mode: int = 0) -> EngineState:
+         start_mode: int = 0, *, cache=None) -> EngineState:
     """Build the device-resident engine state for ``tensor``.
 
     ``tensor`` is a prebuilt :class:`~repro.core.flycoo.FlycooTensor` (its
     plans govern the layout) or a raw COO triple ``(indices, values, dims)``
-    — then the FLYCOO plans are built here under ``config``'s kappa policy.
+    — then the FLYCOO plans are built here under ``config``'s kappa policy,
+    through ``cache`` (a :class:`repro.core.plancache.PlanCache`) when one
+    is given so repeated/streaming inits skip ``plan_mode``.
     The returned state holds the ``start_mode`` layout, padded to the
     uniform slot count ``S_max`` so every mode shares one pytree shape.
     """
     config = config or ExecutionConfig()
-    tensor = _as_flycoo(tensor, config)
+    tensor = _as_flycoo(tensor, config, cache=cache)
     n = tensor.nmodes
     if not 0 <= start_mode < n:
         raise ValueError(f"start_mode {start_mode} out of range for {n} modes")
@@ -104,28 +106,31 @@ def _mode_sched(tensor, d: int, config: ExecutionConfig) -> ModeSched:
     configured backend consumes them (``needs_dedup`` registry attribute —
     the fused Pallas pipeline) under the compact schedule, so xla/ref/
     pallas states skip the per-block sort and the device-resident
-    ``(N-1, S_d)`` tables entirely."""
+    ``(N-1, S_d)`` tables entirely. ``config.dedup=False`` installs the
+    trivial tables instead (one row DMA per slot, no host-side sort)."""
     plan = tensor.plans[d]
     bpart = jnp.asarray(plan.block_part)
     if plan.schedule != "compact" or \
             not getattr(get_backend(config), "needs_dedup", False):
         return ModeSched(bpart=bpart)
-    uidx, upos, nuniq = tensor.dedup_tables(d)
+    uidx, upos, nuniq = (tensor.dedup_tables(d) if config.dedup
+                         else tensor.trivial_dedup_tables(d))
     return ModeSched(bpart=bpart, uidx=jnp.asarray(uidx),
                      upos=jnp.asarray(upos), nuniq=jnp.asarray(nuniq))
 
 
-def _as_flycoo(tensor, config: ExecutionConfig):
+def _as_flycoo(tensor, config: ExecutionConfig, cache=None):
     from repro.core.flycoo import FlycooTensor, build_flycoo
 
     if isinstance(tensor, FlycooTensor):
         return tensor
     indices, values, dims = tensor
     kappa = config.kappa if config.kappa_policy == "fixed" else None
-    return build_flycoo(indices, values, dims, kappa=kappa,
-                        rows_pp=config.resolve_rows_pp(),
-                        block_p=config.block_p,
-                        schedule=config.schedule)
+    build = cache.get_tensor if cache is not None else build_flycoo
+    return build(indices, values, dims, kappa=kappa,
+                 rows_pp=config.resolve_rows_pp(),
+                 block_p=config.block_p,
+                 schedule=config.schedule)
 
 
 # --------------------------------------------------------------------------

@@ -56,6 +56,11 @@ class ExecutionConfig:
         pass instead of the three full-``S_max`` XLA scatters in the scan
         step. ``False`` forces the XLA scatter path for any backend (the
         comparison baseline).
+      dedup: build the in-block factor-row dedup tables for backends that
+        consume them (``needs_dedup``). ``False`` installs the trivial
+        tables (one row DMA per slot) — same kernels, no host-side
+        per-block sort; a plan-space point that trades preprocessing time
+        against kernel DMA traffic.
       vmem_budget_bytes: VMEM budget the ``"vmem"`` kappa policy sizes row
         tiles against when ``rows_pp`` is not given explicitly. ``None`` =
         library default tile (``partition.DEFAULT_ROWS_PER_PARTITION``).
@@ -78,6 +83,7 @@ class ExecutionConfig:
     precision: str = "float32"
     donate: bool | None = None
     fuse_remap: bool = True
+    dedup: bool = True
     vmem_budget_bytes: int | None = None
     rank_hint: int = 32
     schedule: str = "compact"

@@ -7,7 +7,8 @@ try:
 except ModuleNotFoundError:  # container lacks hypothesis: skip only these
     from conftest import given, settings, st
 
-from repro.core.partition import plan_mode
+from repro.core.partition import (plan_from_structure, plan_mode,
+                                  plan_mode_reference)
 from repro.core.flycoo import build_flycoo
 
 
@@ -179,6 +180,42 @@ def test_dedup_tables_reconstruct_rows(seed, zipf_a, block_p):
                 mask = blocks == b
                 assert nuniq[k, b] == len(np.unique(rows[mask]))
             assert int(nuniq[k].sum()) <= plan.nblocks * plan.block_p
+
+
+@settings(max_examples=25, deadline=None)
+@given(dim=st.integers(4, 300), nnz=st.integers(10, 3000),
+       kappa=st.integers(1, 16), seed=st.integers(0, 999),
+       schedule=st.sampled_from(["compact", "rect"]),
+       block_p=st.sampled_from([8, 32, 128]),
+       zipf_a=st.floats(1.1, 3.0))
+def test_vectorized_plan_bitwise_matches_reference(dim, nnz, kappa, seed,
+                                                   schedule, block_p,
+                                                   zipf_a):
+    """The vectorized cold path produces bitwise-identical plans to the
+    pre-autotuner reference implementation (narrow sort keys preserve
+    every stable-sort comparison), and rebuilding a permuted element
+    list from cached structure equals a cold plan of that list."""
+    rng = np.random.default_rng(seed)
+    raw = rng.zipf(zipf_a, nnz)
+    idx = ((raw - 1) % dim).astype(np.int64)
+    new = plan_mode(idx, dim, 0, kappa=kappa, schedule=schedule,
+                    block_p=block_p)
+    ref = plan_mode_reference(idx, dim, 0, kappa=kappa, schedule=schedule,
+                              block_p=block_p)
+    assert (new.kappa, new.rows_pp, new.blocks_pp, new.nblocks,
+            new.max_degree) == (ref.kappa, ref.rows_pp, ref.blocks_pp,
+                                ref.nblocks, ref.max_degree)
+    np.testing.assert_array_equal(new.row_relabel, ref.row_relabel)
+    np.testing.assert_array_equal(new.slot_of_elem, ref.slot_of_elem)
+    np.testing.assert_array_equal(new.part_nnz, ref.part_nnz)
+    np.testing.assert_array_equal(new.block_part, ref.block_part)
+    # structure reuse on a reordered element list == cold plan of it
+    perm = rng.permutation(nnz)
+    rebuilt = plan_from_structure(idx[perm], new)
+    cold = plan_mode(idx[perm], dim, 0, kappa=kappa, schedule=schedule,
+                     block_p=block_p)
+    np.testing.assert_array_equal(rebuilt.slot_of_elem, cold.slot_of_elem)
+    assert rebuilt.row_relabel is new.row_relabel  # shared, not copied
 
 
 def test_dma_row_model_dedups_hot_rows():
