@@ -50,6 +50,36 @@ def time_fn(fn, *args, iters: int | None = None, warmup: int = 2) -> float:
     return float(np.median(ts))
 
 
+def memory_probe() -> dict:
+    """Peak-memory observability hook for the out-of-core tier.
+
+    Returns ``host_peak_rss_bytes`` (the process high-water mark — on
+    Linux ``ru_maxrss`` is KiB) and ``device_peak_bytes`` (the first
+    device's allocator high-water mark, ``None`` where the platform
+    doesn't report one, e.g. CPU jax). fig11's oversubscription rows and
+    the CI stream gate record both next to the modeled ring bytes, so a
+    residency regression shows up as measured numbers, not just model
+    drift.
+    """
+    probe: dict = {"host_peak_rss_bytes": None, "device_peak_bytes": None}
+    try:
+        import resource
+        import sys
+
+        peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        scale = 1024 if sys.platform.startswith("linux") else 1
+        probe["host_peak_rss_bytes"] = int(peak) * scale
+    except (ImportError, ValueError, OSError):
+        pass
+    try:
+        stats = jax.local_devices()[0].memory_stats() or {}
+        probe["device_peak_bytes"] = stats.get(
+            "peak_bytes_in_use", stats.get("bytes_in_use"))
+    except Exception:  # memory_stats unsupported on this backend
+        pass
+    return probe
+
+
 def emit(rows):
     """CSV contract: name,us_per_call,derived. Rows may carry an optional
     4th element — a dict of structured extras recorded only in the JSON."""

@@ -262,6 +262,91 @@ def plan_mode(
     )
 
 
+# --------------------------------------------------------------------------
+# Partition-aligned chunking of a block schedule (the out-of-core tier).
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ChunkSchedule:
+    """Partition-aligned slicing of one mode's block schedule into chunks.
+
+    Chunk ``c`` owns partitions ``[part_start[c], part_start[c+1])`` whose
+    blocks are contiguous in the (partition-major) kernel layout, starting
+    at global block ``block_start[c]`` — so a chunk is a contiguous slot
+    range ``[block_start[c]*P, block_start[c+1]*P)`` of the mode's layout.
+    Because every output row is owned by exactly one partition (paper
+    Observation 2), per-chunk elementwise computations touch disjoint
+    output rows and concatenate bitwise-exactly into the full result.
+
+    All chunks are padded to the uniform ``(chunk_kappa, chunk_blocks)``
+    shape (max real partitions / blocks of any chunk) so the streaming
+    engine compiles ONE program per mode; pad blocks repeat the last real
+    local partition (descriptor stays nondecreasing) and carry all-pad
+    slots.
+    """
+
+    part_start: np.ndarray      # (nchunks+1,) int64 partition boundaries
+    block_start: np.ndarray     # (nchunks+1,) int64 global block boundaries
+    chunk_kappa: int            # uniform (max) partitions per chunk
+    chunk_blocks: int           # uniform (max) real blocks per chunk
+    block_p: int
+
+    @property
+    def nchunks(self) -> int:
+        return len(self.part_start) - 1
+
+    @property
+    def chunk_slots(self) -> int:
+        """Uniform padded slot count of one resident chunk."""
+        return self.chunk_blocks * self.block_p
+
+    def bounds(self, c: int) -> tuple[int, int, int, int]:
+        """``(p0, p1, b0, b1)`` — chunk ``c``'s partition and block range."""
+        return (int(self.part_start[c]), int(self.part_start[c + 1]),
+                int(self.block_start[c]), int(self.block_start[c + 1]))
+
+
+def chunk_schedule(plan: ModePlan, target_slots: int) -> ChunkSchedule:
+    """Greedily pack whole partitions into chunks of <= ``target_slots``
+    kernel slots (min one partition per chunk, so a partition larger than
+    the target still forms a — then oversized — chunk of its own).
+
+    Works for both schedules: the per-partition block counts come from the
+    ``block_part`` descriptor, which ``rect`` materializes too.
+    """
+    target_blocks = max(1, target_slots // plan.block_p)
+    part_blocks = np.bincount(plan.block_part, minlength=plan.kappa)
+    starts = [0]
+    acc = 0
+    for j in range(plan.kappa):
+        nb = int(part_blocks[j])
+        if acc and acc + nb > target_blocks:
+            starts.append(j)
+            acc = 0
+        acc += nb
+    starts.append(plan.kappa)
+    part_start = np.asarray(starts, dtype=np.int64)
+    cum_blocks = np.concatenate([[0], np.cumsum(part_blocks)])
+    block_start = cum_blocks[part_start]
+    chunk_kappa = int(np.diff(part_start).max())
+    chunk_blocks = int(np.diff(block_start).max())
+    return ChunkSchedule(part_start=part_start, block_start=block_start,
+                         chunk_kappa=chunk_kappa, chunk_blocks=chunk_blocks,
+                         block_p=plan.block_p)
+
+
+def chunk_bpart(plan: ModePlan, cs: ChunkSchedule, c: int) -> np.ndarray:
+    """Chunk-local block -> partition descriptor, rebased to the chunk's
+    first partition and padded to the uniform ``chunk_blocks`` length (pad
+    blocks repeat the last real local partition, as in the distributed
+    engine's device-local descriptors)."""
+    p0, _, b0, b1 = cs.bounds(c)
+    seg = plan.block_part[b0:b1].astype(np.int32) - np.int32(p0)
+    out = np.empty(cs.chunk_blocks, dtype=np.int32)
+    out[:len(seg)] = seg
+    out[len(seg):] = seg[-1]
+    return out
+
+
 def plan_from_structure(indices_d: np.ndarray, base: ModePlan) -> ModePlan:
     """Rebuild a plan for a *reordered* element list from a cached one.
 

@@ -26,6 +26,35 @@ Public surface:
                                    multi-device subsystem: EngineState sharded
                                    under shard_map, remap exchanged via a
                                    static collective_permute schedule
+  stream (StreamPlan / StreamState / stream_init / stream_mttkrp /
+          stream_all_modes / cp_als_stream)
+                                   out-of-core residency tier for tensors
+                                   larger than device memory: the FLYCOO
+                                   layout lives host-side and visits the
+                                   device as a double-buffered ring of
+                                   partition-aligned chunks
+                                   (``stream_ring`` buffers, chunk k+1
+                                   uploading while chunk k computes), each
+                                   chunk served by the UNCHANGED backend
+                                   contract — every backend row below works
+                                   streamed, bitwise-identical to the
+                                   resident engine; the Alg. 3 remap is
+                                   reassembled host-side per chunk (the
+                                   streaming analogue of dist's exchange)
+
+Residency — which tier holds the element list:
+
+  ``ExecutionConfig.residency`` / ``PlanSpec.residency`` picks it:
+  ``"full"`` (classic device-resident engine), ``"stream"`` (the chunk
+  ring), or ``"auto"`` — ``make_engine`` compares the resident footprint
+  (``stream.resident_bytes``) against ``device_budget_bytes`` and streams
+  exactly when the tensor does not fit. One budget drives everything:
+  ``device_budget_bytes`` sizes the chunk ring (``chunk_nnz`` overrides),
+  and — via ``derive_vmem_budget`` in ``PlanSpec.canonical()`` — the VMEM
+  share that sizes row tiles (``rows_pp``), so the two tiers can never
+  disagree about memory. The autotuner prices streamed specs with a
+  transfer-bytes term (chunk H2D + remap fragments per hop), so tuned
+  chunk sizes are chosen, not guessed.
   PlanSpec / PlanSpace / make_engine
                                    declarative plan+backend factory: one
                                    frozen spec naming every searchable knob
@@ -60,7 +89,8 @@ Migration from the deprecated stateful executor:
   exe.all_modes(factors)           -> outs, s = engine.all_modes(s, factors)
   exe.layout / exe.current_mode    -> s.val / s.idx / s.alpha / s.mode
 """
-from .config import (ExecutionConfig, KAPPA_POLICIES, SCHEDULES,
+from .config import (ExecutionConfig, KAPPA_POLICIES, RESIDENCIES,
+                     SCHEDULES, derive_vmem_budget,
                      platform_default_interpret)
 from .state import (EngineState, ModeSched, ModeStatic,
                     mode_static_from_plan)
@@ -73,9 +103,14 @@ from .dist import (DistConfig, DistState, ExchangeSchedule, shard_state,
                    dist_mttkrp, dist_all_modes)
 from .factory import PlanSpec, PlanSpace, make_engine, SPACE_DIMS
 from . import autotune
+from . import stream
+from .stream import (StreamPlan, StreamState, cp_als_stream, plan_stream,
+                     resident_bytes, stream_all_modes, stream_init,
+                     stream_mttkrp)
 
 __all__ = [
-    "ExecutionConfig", "KAPPA_POLICIES", "SCHEDULES",
+    "ExecutionConfig", "KAPPA_POLICIES", "SCHEDULES", "RESIDENCIES",
+    "derive_vmem_budget",
     "platform_default_interpret", "EngineState", "ModeSched", "ModeStatic",
     "mode_static_from_plan", "BACKENDS", "register_backend", "get_backend",
     "compute_lrow", "init", "mttkrp", "all_modes", "scan_jaxpr",
@@ -83,4 +118,6 @@ __all__ = [
     "dist", "DistConfig", "DistState", "ExchangeSchedule", "shard_state",
     "dist_mttkrp", "dist_all_modes",
     "PlanSpec", "PlanSpace", "make_engine", "SPACE_DIMS", "autotune",
+    "stream", "StreamPlan", "StreamState", "stream_init", "stream_mttkrp",
+    "stream_all_modes", "cp_als_stream", "plan_stream", "resident_bytes",
 ]

@@ -51,18 +51,87 @@ def _mode_degrees(indices: np.ndarray, dims: Sequence[int]) -> list:
 
 
 # --------------------------------------------------------------------------
+# Streaming transfer term (chunk H2D + remap fragment D2H per hop).
+#
+# Costs are in *slot units* (one f32 element move); transfer bytes divide
+# by 4 to land in the same unit, plus ``block_p`` slots of launch/ring-
+# turnaround overhead per chunk so the tuner never picks pathologically
+# tiny chunks (chunk padding alone would not punish a chunk of exactly one
+# partition).
+# --------------------------------------------------------------------------
+def _analytic_stream_cost(spec: PlanSpec, config, dims, nnz: int,
+                          mode_nblocks: Sequence[int]) -> float:
+    """Histogram-stage streaming transfer cost; mirrors
+    :func:`repro.engine.stream.stream_transfer_model` with chunk counts
+    approximated from the modeled block totals (no plans built)."""
+    from repro.engine.stream import (bytes_per_slot, resolve_chunk_slots,
+                                     row_bytes)
+
+    n = len(dims)
+    tables = _needs_dedup_tables(spec) and spec.dedup
+    target = resolve_chunk_slots(config, dims, tables=tables)
+    target_blocks = max(1, target // spec.block_p)
+    total = 0.0
+    for nblocks in mode_nblocks:
+        nchunks = max(1, -(-int(nblocks) // target_blocks))
+        upload_slots = int(nblocks) * spec.block_p
+        total += upload_slots * bytes_per_slot(n, tables) / 4.0
+        total += nnz * row_bytes(n) / 4.0          # remap fragment per hop
+        total += nchunks * spec.block_p            # per-chunk overhead
+    return total
+
+
+def _analytic_streams(spec: PlanSpec, config, dims, nnz: int,
+                      mode_nblocks: Sequence[int]) -> bool:
+    """Whether this spec runs the streaming tier, with ``"auto"`` resolved
+    against a histogram-stage estimate of the resident footprint."""
+    if spec.residency == "stream":
+        return True
+    if spec.residency != "auto" or config.device_budget_bytes is None:
+        return False
+    n = len(dims)
+    smax = max(int(b) for b in mode_nblocks) * spec.block_p
+    resident = smax * 4 * (1 + 2 * n)
+    tables = _needs_dedup_tables(spec) and spec.dedup
+    for nblocks in mode_nblocks:
+        s_d = int(nblocks) * spec.block_p
+        resident += int(nblocks) * 4
+        if tables:
+            resident += s_d * 8 * (n - 1) + int(nblocks) * 4 * (n - 1)
+    resident += sum(int(d) for d in dims) * 4 * (1 + spec.rank_hint)
+    resident += max(int(d) for d in dims) * spec.rank_hint * 4
+    return resident > config.device_budget_bytes
+
+
+def _spec_streams(spec: PlanSpec, tensor) -> bool:
+    """Exact-stage residency resolution — the same rule
+    ``factory.make_engine`` applies (``resident_bytes`` vs budget)."""
+    from repro.engine.stream import resident_bytes
+
+    if spec.residency == "stream":
+        return True
+    config = spec.to_config()
+    return (spec.residency == "auto"
+            and config.device_budget_bytes is not None
+            and resident_bytes(tensor, config) > config.device_budget_bytes)
+
+
+# --------------------------------------------------------------------------
 # Stage 1: analytic cost from degree histograms only.
 # --------------------------------------------------------------------------
 def analytic_cost(degrees: Sequence[np.ndarray], dims: Sequence[int],
                   nnz: int, spec: PlanSpec) -> float:
     """Histogram-only plan cost (slot units): pad slots + modeled DMA row
-    copies + imbalance surplus over the OPT lower bound. No plans built.
+    copies + imbalance surplus over the OPT lower bound, plus the modeled
+    transfer traffic (chunk H2D + remap fragments) when the spec resolves
+    to the streaming tier. No plans built.
     """
     spec = spec.canonical()
     config = spec.to_config()
     n = len(dims)
     p_blk = spec.block_p
     total = 0.0
+    mode_nblocks = []
     # per-factor expected unique rows per block (collision model) — spec-
     # independent except for P, computed once per input mode
     uniq_per_block = []
@@ -82,6 +151,7 @@ def analytic_cost(degrees: Sequence[np.ndarray], dims: Sequence[int],
             nblocks = kappa * int(blocks.max())
         else:
             nblocks = int(blocks.sum())
+        mode_nblocks.append(nblocks)
         pad_slots = nblocks * p_blk - nnz
         # imbalance surplus of the achieved max load over the OPT bound
         opt_lb = max(float(part_nnz.mean()), float(deg[0]))
@@ -92,6 +162,9 @@ def analytic_cost(degrees: Sequence[np.ndarray], dims: Sequence[int],
         else:
             dma = (n - 1) * nblocks * p_blk
         total += pad_slots + dma + surplus
+    if _analytic_streams(spec, config, dims, nnz, mode_nblocks):
+        total += _analytic_stream_cost(spec, config, dims, nnz,
+                                       mode_nblocks)
     return float(total)
 
 
@@ -101,7 +174,10 @@ def analytic_cost(degrees: Sequence[np.ndarray], dims: Sequence[int],
 def modeled_cost(tensor, spec: PlanSpec) -> float:
     """Exact modeled cost of ``tensor``'s built plans under ``spec``:
     pad slots + factor-row DMA copies (dedup tables when the spec uses
-    them, per-slot copies otherwise)."""
+    them, per-slot copies otherwise), plus the exact streamed transfer
+    traffic (:func:`repro.engine.stream.stream_transfer_model`) when the
+    spec resolves to the streaming tier — so tuned chunk sizes are chosen
+    against real chunk padding, not guessed."""
     spec = spec.canonical()
     total = 0.0
     for d in range(tensor.nmodes):
@@ -111,6 +187,12 @@ def modeled_cost(tensor, spec: PlanSpec) -> float:
             total += tensor.dma_row_model(d)["dedup_rows"]
         else:
             total += (tensor.nmodes - 1) * plan.padded_nnz
+    if _spec_streams(spec, tensor):
+        from repro.engine.stream import stream_transfer_model
+
+        model = stream_transfer_model(tensor, spec.to_config())
+        total += (model["h2d_bytes"] + model["fragment_bytes"]) / 4.0
+        total += model["total_chunks"] * spec.block_p
     return float(total)
 
 

@@ -22,6 +22,30 @@ KAPPA_POLICIES = ("vmem", "fixed")
 # the max partition's block count (the comparison baseline).
 SCHEDULES = ("compact", "rect")
 
+# Residency tiers: "full" keeps the whole FLYCOO layout device-resident
+# (the classic engine); "stream" keeps only a double-buffered ring of
+# partition-aligned chunks resident (the out-of-core tier,
+# ``repro.engine.stream``); "auto" lets ``factory.make_engine`` pick —
+# stream exactly when the resident layout would exceed
+# ``device_budget_bytes``.
+RESIDENCIES = ("auto", "full", "stream")
+
+# One budget, two tiers: when only the device (HBM) budget is given, the
+# VMEM share the "vmem" kappa policy sizes row tiles against is derived
+# from it — a fixed fraction capped at a typical per-core VMEM — so
+# residency, rows_pp, and chunking can never contradict each other.
+DEFAULT_VMEM_BYTES = 16 * 1024 * 1024
+VMEM_FRACTION_OF_DEVICE = 8
+
+
+def derive_vmem_budget(device_budget_bytes: int) -> int:
+    """VMEM share of a device (HBM) budget: ``device/8`` capped at 16 MiB.
+    The single derivation rule ``PlanSpec.canonical()`` and
+    ``ExecutionConfig.resolve_rows_pp`` both use, so the row-tile sizing
+    and the chunk sizing always answer to the same budget."""
+    return max(1, min(DEFAULT_VMEM_BYTES,
+                      device_budget_bytes // VMEM_FRACTION_OF_DEVICE))
+
 
 def platform_default_interpret() -> bool:
     """Single source of the Pallas interpret-mode platform default: run the
@@ -72,6 +96,20 @@ class ExecutionConfig:
         the default) or ``"rect"`` (rectangular comparison baseline). A
         prebuilt ``FlycooTensor``'s plans carry their own schedule and
         take precedence.
+      residency: memory tier — ``"full"`` (whole layout device-resident),
+        ``"stream"`` (out-of-core chunk ring, ``repro.engine.stream``), or
+        ``"auto"`` (factory picks by comparing the resident footprint to
+        ``device_budget_bytes``).
+      chunk_nnz: target nonzeros per streamed chunk (partition-aligned;
+        the planner rounds to whole partitions). ``None`` = derive from
+        ``device_budget_bytes`` / the library default.
+      device_budget_bytes: device (HBM) budget the streaming tier sizes
+        its resident chunk ring against, and the threshold ``"auto"``
+        residency compares the full layout to. Also the root of the
+        derived VMEM budget (``derive_vmem_budget``) when
+        ``vmem_budget_bytes`` is not set.
+      stream_ring: number of resident chunk buffers in the streaming ring
+        (2 = classic double buffering: chunk k computes while k+1 uploads).
     """
 
     backend: str = "xla"
@@ -87,6 +125,10 @@ class ExecutionConfig:
     vmem_budget_bytes: int | None = None
     rank_hint: int = 32
     schedule: str = "compact"
+    residency: str = "auto"
+    chunk_nnz: int | None = None
+    device_budget_bytes: int | None = None
+    stream_ring: int = 2
 
     def __post_init__(self):
         if self.kappa_policy not in KAPPA_POLICIES:
@@ -95,10 +137,27 @@ class ExecutionConfig:
         if self.schedule not in SCHEDULES:
             raise ValueError(
                 f"schedule {self.schedule!r} not in {SCHEDULES}")
+        if self.residency not in RESIDENCIES:
+            raise ValueError(
+                f"residency {self.residency!r} not in {RESIDENCIES}")
         if self.kappa_policy == "fixed" and self.kappa is None:
             raise ValueError("kappa_policy='fixed' requires kappa")
         if self.vmem_budget_bytes is not None and self.vmem_budget_bytes < 1:
             raise ValueError("vmem_budget_bytes must be positive")
+        if self.chunk_nnz is not None and self.chunk_nnz < 1:
+            raise ValueError("chunk_nnz must be positive")
+        if (self.device_budget_bytes is not None
+                and self.device_budget_bytes < 1):
+            raise ValueError("device_budget_bytes must be positive")
+        if self.stream_ring < 1:
+            raise ValueError("stream_ring must be >= 1")
+        if (self.vmem_budget_bytes is not None
+                and self.device_budget_bytes is not None
+                and self.vmem_budget_bytes > self.device_budget_bytes):
+            raise ValueError(
+                "contradictory budgets: vmem_budget_bytes "
+                f"({self.vmem_budget_bytes}) exceeds device_budget_bytes "
+                f"({self.device_budget_bytes})")
 
     # ------------------------------------------------------------ resolution
     def resolve_interpret(self) -> bool:
@@ -129,9 +188,21 @@ class ExecutionConfig:
         """
         if self.rows_pp is not None:
             return self.rows_pp
-        if self.vmem_budget_bytes is None:
+        vmem = self.resolve_vmem_budget()
+        if vmem is None:
             return None
-        return max(8, self.vmem_budget_bytes // (2 * 4 * self.rank_hint))
+        return max(8, vmem // (2 * 4 * self.rank_hint))
+
+    def resolve_vmem_budget(self) -> int | None:
+        """The one VMEM budget everything answers to: explicit
+        ``vmem_budget_bytes`` wins; otherwise it is derived from
+        ``device_budget_bytes`` (``derive_vmem_budget``); ``None`` when
+        neither budget is set."""
+        if self.vmem_budget_bytes is not None:
+            return self.vmem_budget_bytes
+        if self.device_budget_bytes is not None:
+            return derive_vmem_budget(self.device_budget_bytes)
+        return None
 
     def kappa_for(self, dim: int, n_dev: int = 1) -> int:
         """Partition count for a mode of size ``dim`` under this config's
@@ -160,5 +231,5 @@ class ExecutionConfig:
         return min(kappa, (dim // n_dev) * n_dev)
 
 
-__all__ = ["ExecutionConfig", "KAPPA_POLICIES", "SCHEDULES",
-           "platform_default_interpret"]
+__all__ = ["ExecutionConfig", "KAPPA_POLICIES", "SCHEDULES", "RESIDENCIES",
+           "derive_vmem_budget", "platform_default_interpret"]

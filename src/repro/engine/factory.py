@@ -38,7 +38,8 @@ from .dist import EXCHANGES, DistConfig, shard_state
 
 # Searchable spec fields, in enumeration order (PlanSpace dimensions).
 SPACE_DIMS = ("backend", "schedule", "block_p", "rows_pp",
-              "vmem_budget_bytes", "dedup", "fuse_remap", "exchange")
+              "vmem_budget_bytes", "dedup", "fuse_remap", "exchange",
+              "residency", "chunk_nnz")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +63,10 @@ class PlanSpec:
     fuse_remap: bool = True
     interpret: bool | None = None
     exchange: str = "permute"
+    residency: str = "auto"
+    chunk_nnz: int | None = None
+    device_budget_bytes: int | None = None
+    stream_ring: int = 2
 
     def __post_init__(self):
         if self.exchange not in EXCHANGES:
@@ -77,7 +82,10 @@ class PlanSpec:
             kappa=self.kappa, rows_pp=self.rows_pp,
             fuse_remap=self.fuse_remap, dedup=self.dedup,
             vmem_budget_bytes=self.vmem_budget_bytes,
-            rank_hint=self.rank_hint, schedule=self.schedule)
+            rank_hint=self.rank_hint, schedule=self.schedule,
+            residency=self.residency, chunk_nnz=self.chunk_nnz,
+            device_budget_bytes=self.device_budget_bytes,
+            stream_ring=self.stream_ring)
 
     def to_dist_config(self, data_axis: str = "data") -> DistConfig:
         return DistConfig(data_axis=data_axis, exchange=self.exchange)
@@ -85,8 +93,14 @@ class PlanSpec:
     def canonical(self) -> "PlanSpec":
         """Collapse knob settings with identical semantics to one point:
         dedup only exists for needs_dedup backends under ``compact``;
-        fused remap only for backends exposing ``fused_remap``."""
+        fused remap only for backends exposing ``fused_remap``; streaming
+        knobs only for the streaming tier; and the VMEM budget is made
+        explicit from ``device_budget_bytes`` (``derive_vmem_budget``)
+        when only the device budget is given — ONE budget source of truth,
+        so residency, ``rows_pp``, and chunking can never silently
+        contradict each other."""
         from .backends import get_backend
+        from .config import derive_vmem_budget
 
         backend = get_backend(self.backend)
         spec = self
@@ -95,6 +109,17 @@ class PlanSpec:
             spec = dataclasses.replace(spec, dedup=True)
         if getattr(backend, "fused_remap", None) is None:
             spec = dataclasses.replace(spec, fuse_remap=True)
+        if spec.vmem_budget_bytes is None and \
+                spec.device_budget_bytes is not None:
+            spec = dataclasses.replace(
+                spec,
+                vmem_budget_bytes=derive_vmem_budget(
+                    spec.device_budget_bytes))
+        if spec.residency == "auto" and spec.device_budget_bytes is None:
+            # auto without a budget can only ever resolve to full
+            spec = dataclasses.replace(spec, residency="full")
+        if spec.residency == "full":
+            spec = dataclasses.replace(spec, chunk_nnz=None, stream_ring=2)
         return spec
 
 
@@ -114,6 +139,8 @@ class PlanSpace:
     dedup: tuple = (True, False)
     fuse_remap: tuple = (True,)
     exchange: tuple = ("permute",)
+    residency: tuple = ("auto",)
+    chunk_nnz: tuple = (None,)
     base: PlanSpec = PlanSpec()
 
     def specs(self) -> tuple[PlanSpec, ...]:
@@ -145,12 +172,19 @@ def make_engine(tensor, spec: PlanSpec | None = None, *,
     spec's exchange schedule, and raw COO input is planned with per-mode
     kappa rounded to the device count.
 
-    Returns ``EngineState`` (or ``DistState`` when ``mesh`` is given).
+    The spec's ``residency`` picks the memory tier: ``"full"`` returns a
+    device-resident ``EngineState`` (or ``DistState`` with a mesh),
+    ``"stream"`` the out-of-core ``StreamState``
+    (:mod:`repro.engine.stream`), and ``"auto"`` compares the resident
+    footprint (:func:`repro.engine.stream.resident_bytes`) against
+    ``device_budget_bytes`` — tensors that don't fit stream, tensors that
+    do stay resident.
     """
     from repro.core.flycoo import FlycooTensor
     from repro.core.plancache import DEFAULT_CACHE
 
     from .api import init
+    from .stream import resident_bytes, stream_init
 
     spec = (spec or PlanSpec()).canonical()
     config = spec.to_config()
@@ -171,6 +205,25 @@ def make_engine(tensor, spec: PlanSpec | None = None, *,
         tensor = builder(indices, values, dims, kappa=kappas,
                          rows_pp=config.resolve_rows_pp(),
                          block_p=config.block_p, schedule=config.schedule)
+
+    residency = spec.residency
+    if residency == "auto":
+        # plans are needed to size the resident footprint; build once
+        # through the cache and hand the planned tensor down either tier
+        from .api import _as_flycoo
+
+        tensor = _as_flycoo(tensor, config, cache=cache)
+        over = (config.device_budget_bytes is not None
+                and resident_bytes(tensor, config)
+                > config.device_budget_bytes)
+        residency = "stream" if (over and mesh is None) else "full"
+
+    if residency == "stream":
+        if mesh is not None:
+            raise ValueError(
+                "residency='stream' is a single-device tier; drop mesh or "
+                "use residency='full'")
+        return stream_init(tensor, config, start_mode, cache=cache)
 
     state = init(tensor, config, start_mode, cache=cache)
     if mesh is None:

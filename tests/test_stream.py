@@ -1,0 +1,276 @@
+"""Out-of-core streaming engine tests (ISSUE 7 acceptance surface).
+
+Streamed-vs-resident BITWISE parity on all four backends, nmodes 3-6, any
+start mode, chunk-boundary properties (one-partition chunks, exactly-S
+chunks, non-divisor sizes), full ``cp_als_stream`` sweeps, budget-derived
+chunk sizing with measured ring residency under budget, factory
+auto-residency, the autotuner's transfer-bytes term, and the PlanCache
+disk persistence satellite.
+
+Tensors are deliberately tiny — the chunk machinery is shape-generic and
+CI runs every backend through Pallas interpret mode on CPU.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.engine as engine
+from repro.core.flycoo import build_flycoo
+from repro.engine import ExecutionConfig, PlanSpec, make_engine
+from repro.engine.stream import (StreamState, cp_als_stream, plan_stream,
+                                 resident_bytes, resolve_chunk_slots,
+                                 stream_all_modes, stream_init,
+                                 stream_transfer_model)
+
+BACKENDS = ("xla", "ref", "pallas", "pallas_fused")
+
+
+def _coo(nmodes=3, nnz=300, seed=0):
+    dims = (29, 23, 19, 13, 11, 7)[:nmodes]
+    rng = np.random.default_rng(seed)
+    idx = np.unique(
+        np.stack([rng.integers(0, d, nnz) for d in dims], 1)
+        .astype(np.int64), axis=0)
+    return idx, rng.standard_normal(len(idx)).astype(np.float32), dims
+
+
+def _factors(dims, rank=5, seed=1):
+    key = jax.random.PRNGKey(seed)
+    return tuple(
+        jax.random.normal(jax.random.fold_in(key, d), (dims[d], rank),
+                          jnp.float32) for d in range(len(dims)))
+
+
+def _assert_stream_matches_resident(config, t, factors, start_mode=0):
+    st = engine.init(t, config, start_mode=start_mode)
+    outs_res, _ = engine.all_modes(st, factors)
+    ss = stream_init(t, config, start_mode=start_mode)
+    outs_s, ss = stream_all_modes(ss, factors)
+    for d in range(t.nmodes):
+        np.testing.assert_array_equal(np.asarray(outs_res[d]),
+                                      np.asarray(outs_s[d]),
+                                      err_msg=f"mode {d}")
+    return ss
+
+
+# --------------------------------------------------------------------------
+# Bitwise parity: backends x schedules x nmodes x start modes.
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("schedule", ["compact", "rect"])
+def test_stream_bitwise_all_backends(backend, schedule):
+    idx, val, dims = _coo()
+    t = build_flycoo(idx, val, dims, rows_pp=8, schedule=schedule)
+    config = ExecutionConfig(backend=backend, rows_pp=8, chunk_nnz=300,
+                             schedule=schedule)
+    _assert_stream_matches_resident(config, t, _factors(dims))
+
+
+@pytest.mark.parametrize("nmodes", [3, 4, 5, 6])
+def test_stream_bitwise_nmodes(nmodes):
+    idx, val, dims = _coo(nmodes=nmodes, nnz=250)
+    t = build_flycoo(idx, val, dims, rows_pp=4)
+    config = ExecutionConfig(backend="pallas_fused", rows_pp=4,
+                             chunk_nnz=256)
+    _assert_stream_matches_resident(config, t, _factors(dims))
+
+
+@pytest.mark.parametrize("start_mode", [0, 1, 2, 3])
+def test_stream_any_start_mode(start_mode):
+    idx, val, dims = _coo(nmodes=4, nnz=250)
+    t = build_flycoo(idx, val, dims, rows_pp=4)
+    config = ExecutionConfig(backend="xla", rows_pp=4, chunk_nnz=256)
+    _assert_stream_matches_resident(config, t, _factors(dims),
+                                    start_mode=start_mode)
+
+
+# --------------------------------------------------------------------------
+# Chunk-boundary properties: every chunking is bitwise-equal.
+# --------------------------------------------------------------------------
+def test_chunk_boundaries_bitwise_equal():
+    """One-partition chunks, exactly-S (single chunk), and non-divisor
+    chunk sizes all produce bitwise-identical results — chunking is
+    partition-aligned, so no boundary can split an accumulation."""
+    idx, val, dims = _coo(nnz=500)
+    t = build_flycoo(idx, val, dims, rows_pp=8)
+    factors = _factors(dims)
+    smax = max(p.padded_nnz for p in t.plans)
+    one_partition = max(p.padded_nnz // p.kappa for p in t.plans)
+    for chunk_nnz in (1, one_partition, smax, smax + 1, 137, 384):
+        config = ExecutionConfig(backend="xla", rows_pp=8,
+                                 chunk_nnz=chunk_nnz)
+        ss = _assert_stream_matches_resident(config, t, factors)
+        assert ss.stats.chunks_streamed == sum(
+            cs.nchunks for cs in ss.plan.chunks)
+
+
+def test_single_chunk_covers_whole_mode():
+    """chunk_nnz >= S collapses to one chunk per mode (the degenerate
+    resident case, still through the streaming path)."""
+    idx, val, dims = _coo()
+    t = build_flycoo(idx, val, dims, rows_pp=8)
+    config = ExecutionConfig(backend="xla", rows_pp=8, chunk_nnz=1 << 20)
+    plan = plan_stream(t, config)
+    assert all(cs.nchunks == 1 for cs in plan.chunks)
+    _assert_stream_matches_resident(config, t, _factors(dims))
+
+
+# --------------------------------------------------------------------------
+# Full ALS sweeps.
+# --------------------------------------------------------------------------
+def test_cp_als_stream_matches_resident():
+    idx, val, dims = _coo(nnz=400)
+    t = build_flycoo(idx, val, dims, rows_pp=8)
+    config = ExecutionConfig(backend="xla", rows_pp=8, chunk_nnz=300)
+    from repro.core.cpd import cp_als
+
+    key = jax.random.PRNGKey(3)
+    res = cp_als(t, rank=4, iters=3, key=key, config=config)
+    res_s = cp_als_stream(t, rank=4, iters=3, key=key, config=config)
+    for d in range(len(dims)):
+        np.testing.assert_allclose(np.asarray(res.factors[d]),
+                                   np.asarray(res_s.factors[d]),
+                                   rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(res.fits),
+                               np.asarray(res_s.fits), atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Budget model: ring residency, sizing, auto-residency, transfer term.
+# --------------------------------------------------------------------------
+def test_budget_sizes_ring_under_budget():
+    """An achievable ``device_budget_bytes`` bounds the measured chunk
+    ring; the tensor oversubscribes the budget yet streams bitwise."""
+    idx, val, dims = _coo(nnz=600)
+    t = build_flycoo(idx, val, dims, rows_pp=8)
+    budget = 24 * 1024
+    config = ExecutionConfig(backend="xla", rows_pp=8, rank_hint=5,
+                             device_budget_bytes=budget)
+    assert resident_bytes(t, config) > budget  # oversubscribed
+    ss = _assert_stream_matches_resident(config, t, _factors(dims))
+    assert 0 < ss.stats.peak_ring_bytes <= budget
+    assert ss.stats.peak_ring_chunks <= config.stream_ring
+    assert ss.stats.h2d_bytes > 0 and ss.stats.fragment_bytes > 0
+    # double buffering: every upload but each mode's first is prefetched
+    assert ss.stats.overlap_efficiency == pytest.approx(
+        1 - t.nmodes / ss.stats.uploads)
+
+
+def test_resolve_chunk_slots_priority():
+    config = ExecutionConfig(chunk_nnz=999)
+    assert resolve_chunk_slots(config, (64, 64, 64)) == 999
+    from repro.engine.stream import DEFAULT_CHUNK_SLOTS
+
+    assert resolve_chunk_slots(ExecutionConfig(),
+                               (64, 64, 64)) == DEFAULT_CHUNK_SLOTS
+    tight = resolve_chunk_slots(
+        ExecutionConfig(device_budget_bytes=1 << 20, rows_pp=8),
+        (64, 64, 64))
+    loose = resolve_chunk_slots(
+        ExecutionConfig(device_budget_bytes=1 << 24, rows_pp=8),
+        (64, 64, 64))
+    assert tight < loose  # bigger budget -> bigger chunks
+
+
+def test_make_engine_auto_residency():
+    idx, val, dims = _coo()
+    big = make_engine((idx, val, dims),
+                      PlanSpec(rows_pp=8, device_budget_bytes=1 << 30),
+                      cache=False)
+    assert isinstance(big, engine.EngineState)
+    small = make_engine((idx, val, dims),
+                        PlanSpec(rows_pp=8, rank_hint=5,
+                                 device_budget_bytes=16_000),
+                        cache=False)
+    assert isinstance(small, StreamState)
+    forced = make_engine((idx, val, dims),
+                         PlanSpec(rows_pp=8, residency="stream",
+                                  chunk_nnz=256), cache=False)
+    assert isinstance(forced, StreamState)
+
+
+def test_planspec_canonical_threads_one_budget():
+    spec = PlanSpec(device_budget_bytes=1 << 23).canonical()
+    from repro.engine import derive_vmem_budget
+
+    assert spec.vmem_budget_bytes == derive_vmem_budget(1 << 23)
+    assert PlanSpec().canonical().residency == "full"  # auto, no budget
+    with pytest.raises(ValueError):  # contradictory budgets refused
+        ExecutionConfig(vmem_budget_bytes=1 << 20,
+                        device_budget_bytes=1 << 10)
+
+
+def test_autotune_prices_streaming_transfer():
+    idx, val, dims = _coo(nnz=500)
+    t = build_flycoo(idx, val, dims, rows_pp=8)
+    from repro.engine.autotune import analytic_cost, modeled_cost
+
+    full = PlanSpec(backend="xla", rows_pp=8)
+    streamed = PlanSpec(backend="xla", rows_pp=8, residency="stream")
+    assert modeled_cost(t, streamed) > modeled_cost(t, full)
+    degrees = [np.bincount(idx[:, d], minlength=dims[d])
+               for d in range(len(dims))]
+    assert analytic_cost(degrees, dims, len(idx), streamed) > \
+        analytic_cost(degrees, dims, len(idx), full)
+    model = stream_transfer_model(t, streamed.to_config())
+    assert model["h2d_bytes"] > 0 and model["total_chunks"] >= t.nmodes
+
+
+# --------------------------------------------------------------------------
+# Satellite: PlanCache disk persistence.
+# --------------------------------------------------------------------------
+def test_plancache_disk_roundtrip(tmp_path):
+    from repro.core.plancache import PlanCache
+
+    idx, val, dims = _coo(nnz=400)
+    c1 = PlanCache(path=tmp_path)
+    t0 = c1.get_tensor(idx, val, dims, rows_pp=8)
+    assert c1.last_outcome == "miss" and c1.disk_saves == 1
+
+    # a fresh cache (new process analogue) loads the blob: identity hit
+    c2 = PlanCache(path=tmp_path)
+    t1 = c2.get_tensor(idx.copy(), val, dims, rows_pp=8)
+    assert c2.last_outcome == "hit" and c2.disk_loads == 1
+    assert c2.misses == 0
+    for a, b in zip(t0.plans, t1.plans):
+        np.testing.assert_array_equal(a.row_relabel, b.row_relabel)
+        np.testing.assert_array_equal(a.slot_of_elem, b.slot_of_elem)
+        np.testing.assert_array_equal(a.block_part, b.block_part)
+
+    # permuted order: structural reuse from disk, bitwise vs cold plan
+    rng = np.random.default_rng(7)
+    perm = rng.permutation(len(idx))
+    c3 = PlanCache(path=tmp_path)
+    t2 = c3.get_tensor(idx[perm], val[perm], dims, rows_pp=8)
+    assert c3.last_outcome == "structural" and c3.disk_loads == 1
+    cold = build_flycoo(idx[perm], val[perm], dims, rows_pp=8)
+    for a, b in zip(t2.plans, cold.plans):
+        np.testing.assert_array_equal(a.row_relabel, b.row_relabel)
+        np.testing.assert_array_equal(a.slot_of_elem, b.slot_of_elem)
+
+    # different knobs address a different blob; memory path still serves
+    c3.get_tensor(idx[perm], val[perm], dims, rows_pp=8)
+    assert c3.last_outcome == "hit" and c3.disk_loads == 1
+
+
+def test_plancache_disk_streamed_engine_parity(tmp_path):
+    """A streamed engine built through a disk-persisted cache is bitwise-
+    identical to one built cold — plans can never change numerics."""
+    from repro.core.plancache import PlanCache
+
+    idx, val, dims = _coo(nnz=400)
+    factors = _factors(dims)
+    spec = PlanSpec(backend="xla", rows_pp=8, residency="stream",
+                    chunk_nnz=300)
+    outs_cold, _ = stream_all_modes(
+        make_engine((idx, val, dims), spec, cache=False), factors)
+    PlanCache(path=tmp_path).get_tensor(idx, val, dims, rows_pp=8)
+    warm_cache = PlanCache(path=tmp_path)
+    outs_disk, _ = stream_all_modes(
+        make_engine((idx, val, dims), spec, cache=warm_cache), factors)
+    assert warm_cache.disk_loads == 1
+    for d in range(len(dims)):
+        np.testing.assert_array_equal(np.asarray(outs_cold[d]),
+                                      np.asarray(outs_disk[d]))
