@@ -15,6 +15,10 @@ import jax
 import numpy as np
 
 from repro.core import datasets
+from repro.obs.probe import memory_probe  # re-export (moved to repro.obs)
+
+__all__ = ["load_bench_tensor", "time_fn", "Timing", "memory_probe",
+           "emit", "ensure_results_file"]
 
 # Workload knobs, overridable from the environment so CI can run the same
 # figure scripts as a bounded smoke (tiny synthetic tensors, few timing
@@ -37,8 +41,40 @@ def load_bench_tensor(name: str, **kw):
                          seed=0, **kw)
 
 
-def time_fn(fn, *args, iters: int | None = None, warmup: int = 2) -> float:
-    """Median wall time (seconds) of a device-blocking call."""
+class Timing(float):
+    """A median wall time that also carries the sample dispersion.
+
+    Behaves as a plain ``float`` (the median) everywhere — including
+    through the callers' ``time_fn(...) * 1e6`` unit conversions, which
+    scale the stats along with the value — while ``.stats`` rides to
+    :func:`emit`, which folds it into the JSON extras.  Stats keys are
+    unit-neutral quantile/dispersion names (``p10``/``p90``/``iqr``) in
+    the same unit as the value itself.
+    """
+
+    __slots__ = ("stats",)
+
+    def __new__(cls, value: float, stats: dict | None = None):
+        self = super().__new__(cls, value)
+        self.stats = stats or {}
+        return self
+
+    def _scaled(self, k: float) -> "Timing":
+        return Timing(float(self) * k,
+                      {key: (v * k if key != "timing_iters" else v)
+                       for key, v in self.stats.items()})
+
+    def __mul__(self, other):
+        if isinstance(other, (int, float)):
+            return self._scaled(float(other))
+        return NotImplemented
+
+    __rmul__ = __mul__
+
+
+def time_fn(fn, *args, iters: int | None = None, warmup: int = 2) -> Timing:
+    """Median wall time (seconds) of a device-blocking call, as a
+    :class:`Timing` carrying the sample dispersion (p10/p90, iqr)."""
     iters = BENCH_ITERS if iters is None else iters
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
@@ -47,46 +83,25 @@ def time_fn(fn, *args, iters: int | None = None, warmup: int = 2) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
-
-
-def memory_probe() -> dict:
-    """Peak-memory observability hook for the out-of-core tier.
-
-    Returns ``host_peak_rss_bytes`` (the process high-water mark — on
-    Linux ``ru_maxrss`` is KiB) and ``device_peak_bytes`` (the first
-    device's allocator high-water mark, ``None`` where the platform
-    doesn't report one, e.g. CPU jax). fig11's oversubscription rows and
-    the CI stream gate record both next to the modeled ring bytes, so a
-    residency regression shows up as measured numbers, not just model
-    drift.
-    """
-    probe: dict = {"host_peak_rss_bytes": None, "device_peak_bytes": None}
-    try:
-        import resource
-        import sys
-
-        peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
-        scale = 1024 if sys.platform.startswith("linux") else 1
-        probe["host_peak_rss_bytes"] = int(peak) * scale
-    except (ImportError, ValueError, OSError):
-        pass
-    try:
-        stats = jax.local_devices()[0].memory_stats() or {}
-        probe["device_peak_bytes"] = stats.get(
-            "peak_bytes_in_use", stats.get("bytes_in_use"))
-    except Exception:  # memory_stats unsupported on this backend
-        pass
-    return probe
+    p10, p90 = np.percentile(ts, [10, 90])
+    q1, q3 = np.percentile(ts, [25, 75])
+    return Timing(float(np.median(ts)), {
+        "p10": float(p10), "p90": float(p90), "iqr": float(q3 - q1),
+        "timing_iters": iters})
 
 
 def emit(rows):
     """CSV contract: name,us_per_call,derived. Rows may carry an optional
-    4th element — a dict of structured extras recorded only in the JSON."""
+    4th element — a dict of structured extras recorded only in the JSON.
+    A :class:`Timing` value contributes its dispersion stats to the
+    extras automatically (explicit extras win on key collision)."""
     records = []
     for row in rows:
         name, us, derived = row[0], row[1], row[2]
         extra = row[3] if len(row) > 3 else {}
+        if isinstance(us, Timing) and us.stats:
+            extra = {**{k: (round(v, 1) if isinstance(v, float) else v)
+                        for k, v in us.stats.items()}, **extra}
         print(f"{name},{us:.1f},{derived}")
         records.append({"name": name, "us_per_call": round(us, 1),
                         "derived": derived, **extra})

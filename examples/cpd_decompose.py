@@ -5,18 +5,24 @@ FLYCOO executor, and reports fit per sweep (paper's CPD use-case).
 
     PYTHONPATH=src python examples/cpd_decompose.py [--pallas]
     PYTHONPATH=src python examples/cpd_decompose.py --stream
+    PYTHONPATH=src python examples/cpd_decompose.py --stream --trace out.json
 
 ``--stream`` reruns the same decomposition as if the tensor were bigger
 than the device: a deliberately tiny ``device_budget_bytes`` forces the
 out-of-core tier (``repro.engine.stream``), which keeps the element list
 host-side and streams it through a double-buffered ring of
 partition-aligned chunks — same fits, bitwise-identical MTTKRPs.
+
+``--trace PATH`` turns on ``repro.obs`` tracing for the whole run and
+writes a Perfetto-loadable Chrome trace (plan/init/sweep/upload/compute
+spans + the metrics snapshot) to PATH, then prints the run report.
 """
 import argparse
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core import build_flycoo, cp_als
 from repro.engine import ExecutionConfig
 from repro.engine.stream import cp_als_stream, resident_bytes
@@ -31,7 +37,12 @@ def main():
     ap.add_argument("--stream", action="store_true",
                     help="also decompose out-of-core under a tiny device "
                          "budget (tensors bigger than your device)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="enable repro.obs tracing and write a Chrome "
+                         "trace (load at ui.perfetto.dev) to PATH")
     args = ap.parse_args()
+    if args.trace:
+        obs.enable()
 
     rng = np.random.default_rng(0)
     dims, true_rank = (40, 30, 20), 4
@@ -73,6 +84,12 @@ def main():
         assert abs(sres.fits[-1] - res.fits[-1]) < 1e-4, \
             "streamed ALS must match the resident engine"
         print("streamed decomposition matches.")
+
+    if args.trace:
+        obs.write_chrome_trace(args.trace)
+        print(f"\nwrote Chrome trace to {args.trace} "
+              f"(load at ui.perfetto.dev)")
+        print(obs.render_report())
 
 
 if __name__ == "__main__":

@@ -26,6 +26,8 @@ import numpy as np
 
 from repro import engine
 from repro.engine import ExecutionConfig
+from repro.obs.metrics import gauge as _obs_gauge
+from repro.obs.trace import span
 
 from .flycoo import FlycooTensor
 from .mttkrp import mttkrp_ref
@@ -124,12 +126,17 @@ def cp_als(
     norm_x_sq = float(np.sum(tensor.values.astype(np.float64) ** 2))
 
     fits = []
-    for _ in range(iters):
+    for i in range(iters):
         # One dispatch per sweep: scan over modes, ALS update in the fold.
-        outs, state, factors, lam = sweep(
-            state, factors, fold=_als_fold, carry=lam)
-        if track_fit:
-            fits.append(_fit(norm_x_sq, outs[n - 1], factors, lam))
+        with span("cpd.sweep", sweep=i, streamed=False) as sp:
+            outs, state, factors, lam = sweep(
+                state, factors, fold=_als_fold, carry=lam)
+            if track_fit:
+                fit = _fit(norm_x_sq, outs[n - 1], factors, lam)
+                fits.append(fit)
+                sp.set("fit", float(fit))
+                _obs_gauge("cpd_fit", "latest ALS fit per tier").set(
+                    "resident", float(fit))
     return CPDResult(factors=list(factors), lam=lam, fits=fits)
 
 

@@ -48,6 +48,8 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.obs.trace import span as _obs_span
+
 from .partition import DEFAULT_SCHEDULE, ModePlan, plan_mode
 
 _ROW_SENTINEL = np.iinfo(np.int32).max  # pad-slot marker; sorts last
@@ -164,10 +166,11 @@ class FlycooTensor:
         """
         cached = self._dedup_cache.get(d)
         if cached is None:
-            plan = self.plans[d]
-            uidx, upos, nuniq = _dedup_tables_batched(
-                self._slot_rows(d), plan.nblocks, plan.block_p)
-            cached = (uidx, np.ascontiguousarray(upos.T), nuniq)
+            with _obs_span("plan.dedup_tables", mode=d):
+                plan = self.plans[d]
+                uidx, upos, nuniq = _dedup_tables_batched(
+                    self._slot_rows(d), plan.nblocks, plan.block_p)
+                cached = (uidx, np.ascontiguousarray(upos.T), nuniq)
             self._dedup_cache[d] = cached
         return cached
 
@@ -254,12 +257,13 @@ def build_flycoo(
             assert idx_t[d].max(initial=0) < dims[d]
         kappas = ([kappa] * n if kappa is None or np.isscalar(kappa)
                   else list(kappa))
-        plans = [
-            plan_mode(idx_t[d], int(dims[d]), d, kappa=kappas[d],
-                      rows_pp=rows_pp, block_p=block_p, schedule=schedule,
-                      degrees=None if degrees is None else degrees[d])
-            for d in range(n)
-        ]
+        plans = []
+        for d in range(n):
+            with _obs_span("plan.mode", mode=d, nnz=int(values.shape[0])):
+                plans.append(plan_mode(
+                    idx_t[d], int(dims[d]), d, kappa=kappas[d],
+                    rows_pp=rows_pp, block_p=block_p, schedule=schedule,
+                    degrees=None if degrees is None else degrees[d]))
     else:
         # cache-hit path: caller (the plan cache) guarantees the plans
         # match this element list — skip the O(nnz) validation rescan

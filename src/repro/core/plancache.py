@@ -43,6 +43,9 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.obs.metrics import counter as _obs_counter
+from repro.obs.trace import span as _obs_span
+
 from .flycoo import FlycooTensor, build_flycoo
 from .partition import ModePlan, plan_from_structure
 
@@ -120,6 +123,27 @@ class PlanCache:
 
     # ------------------------------------------------------------------ api
     def get_tensor(
+        self,
+        indices: np.ndarray,
+        values: np.ndarray,
+        dims: Sequence[int],
+        kappa: int | Sequence[int] | None = None,
+        rows_pp: int | None = None,
+        block_p: int = 128,
+        schedule: str = "compact",
+    ) -> FlycooTensor:
+        with _obs_span("plan.cache_lookup") as sp:
+            t = self._get_tensor(indices, values, dims, kappa=kappa,
+                                 rows_pp=rows_pp, block_p=block_p,
+                                 schedule=schedule)
+            sp.set("outcome", self.last_outcome)
+            _obs_counter(
+                "plan_cache_outcomes",
+                "plan cache lookups by level (hit/structural/miss)",
+            ).inc(self.last_outcome)
+            return t
+
+    def _get_tensor(
         self,
         indices: np.ndarray,
         values: np.ndarray,

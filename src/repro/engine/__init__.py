@@ -82,6 +82,30 @@ Residency — which tier holds the element list:
                                    tables — an autotunable knob for tensors
                                    whose blocks have no row reuse
 
+Observability (``repro.obs``):
+
+  Every layer is instrumented with hierarchical wall-clock spans —
+  ``factory.make_engine`` (cache lookup -> per-mode ``plan.mode`` ->
+  dedup tables -> device placement), ``autotune`` stages (analytic /
+  exact / measured), ``engine.dispatch`` per jitted call, streamed
+  ``stream.mode``/``stream.upload``/``stream.compute``/``stream.remap``
+  per chunk, ``dist.shard_state`` + exchange-schedule build, and
+  ``cpd.sweep`` with per-sweep fit. Tracing is OFF by default and free
+  when off (a single ``is None`` test per span site); enable with
+  ``repro.obs.enable()`` or ``REPRO_TRACE=1`` (``REPRO_TRACE=path.json``
+  additionally writes a Perfetto-loadable Chrome trace at exit), then
+  export with ``obs.write_chrome_trace(path)`` / summarize with
+  ``obs.render_report()``.
+
+  ``TRACE_COUNTS`` / ``DISPATCH_COUNTS`` (below) live on the
+  ``repro.obs`` metrics registry as the ``engine_traces`` /
+  ``engine_dispatches`` counters — same dict-style surface as before
+  (``DISPATCH_COUNTS["all_modes"]``, ``reset_counters()``), but exported
+  with every trace alongside the stream transfer counters, plan-cache
+  outcome taxonomy, and CPD fit gauges. The span-derived streaming
+  ``overlap_efficiency`` (``obs.stream_overlap_from_spans``) is the
+  profiler-timeline cross-check of ``StreamStats.overlap_efficiency``.
+
 Migration from the deprecated stateful executor:
 
   MTTKRPExecutor(t, backend=b)     -> s = engine.init(t, ExecutionConfig(backend=b))

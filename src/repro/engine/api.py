@@ -21,13 +21,15 @@ traced program (see ``repro.core.cpd``).
 """
 from __future__ import annotations
 
-import collections
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import span
 
 from .backends import compute_lrow, get_backend
 from .config import ExecutionConfig
@@ -42,9 +44,14 @@ FoldFn = Callable[[int, jax.Array, tuple, object], tuple]
 
 # Observability: traces = how many times a program was (re)built; dispatches
 # = how many jitted calls were issued. The benchmarks report the host-loop
-# elimination as dispatches-per-sweep (was nmodes, now 1).
-TRACE_COUNTS: collections.Counter = collections.Counter()
-DISPATCH_COUNTS: collections.Counter = collections.Counter()
+# elimination as dispatches-per-sweep (was nmodes, now 1). These live on the
+# repro.obs metrics registry (exported with every trace); the module-level
+# names and dict-style access (`TRACE_COUNTS["all_modes"]`, `dict(...)`,
+# `reset_counters()`) are the stable public surface.
+TRACE_COUNTS = REGISTRY.counter(
+    "engine_traces", "program (re)builds per entry point")
+DISPATCH_COUNTS = REGISTRY.counter(
+    "engine_dispatches", "jitted calls issued per entry point")
 
 _JIT_CACHE: dict = {}
 
@@ -70,34 +77,43 @@ def init(tensor, config: ExecutionConfig | None = None,
     uniform slot count ``S_max`` so every mode shares one pytree shape.
     """
     config = config or ExecutionConfig()
-    tensor = _as_flycoo(tensor, config, cache=cache)
-    n = tensor.nmodes
-    if not 0 <= start_mode < n:
-        raise ValueError(f"start_mode {start_mode} out of range for {n} modes")
-    statics = tuple(mode_static_from_plan(p) for p in tensor.plans)
-    smax = max(s.padded_nnz for s in statics)
+    with span("engine.init", start_mode=start_mode) as sp:
+        tensor = _as_flycoo(tensor, config, cache=cache)
+        n = tensor.nmodes
+        if not 0 <= start_mode < n:
+            raise ValueError(
+                f"start_mode {start_mode} out of range for {n} modes")
+        statics = tuple(mode_static_from_plan(p) for p in tensor.plans)
+        smax = max(s.padded_nnz for s in statics)
+        sp.set("nmodes", n)
+        sp.set("smax", smax)
 
-    base = tensor.plans[start_mode]
-    val = np.zeros(smax, dtype=np.float32)
-    idx = np.zeros((smax, n), dtype=np.int32)
-    alpha = np.full((smax, n), -1, dtype=np.int32)
-    val[base.slot_of_elem] = tensor.values
-    idx[base.slot_of_elem] = tensor.indices
-    for d in range(n):
-        alpha[base.slot_of_elem, d] = \
-            tensor.plans[d].slot_of_elem.astype(np.int32)
+        with span("engine.host_layout", mode=start_mode):
+            base = tensor.plans[start_mode]
+            val = np.zeros(smax, dtype=np.float32)
+            idx = np.zeros((smax, n), dtype=np.int32)
+            alpha = np.full((smax, n), -1, dtype=np.int32)
+            val[base.slot_of_elem] = tensor.values
+            idx[base.slot_of_elem] = tensor.indices
+            for d in range(n):
+                alpha[base.slot_of_elem, d] = \
+                    tensor.plans[d].slot_of_elem.astype(np.int32)
 
-    return EngineState(
-        val=jnp.asarray(val),
-        idx=jnp.asarray(idx),
-        alpha=jnp.asarray(alpha),
-        relabel=tuple(jnp.asarray(p.row_relabel) for p in tensor.plans),
-        sched=tuple(_mode_sched(tensor, d, config) for d in range(n)),
-        mode=int(start_mode),
-        dims=tensor.dims,
-        statics=statics,
-        config=config,
-    )
+        with span("engine.sched_tables"):
+            sched = tuple(_mode_sched(tensor, d, config) for d in range(n))
+        with span("engine.device_place"):
+            return EngineState(
+                val=jnp.asarray(val),
+                idx=jnp.asarray(idx),
+                alpha=jnp.asarray(alpha),
+                relabel=tuple(jnp.asarray(p.row_relabel)
+                              for p in tensor.plans),
+                sched=sched,
+                mode=int(start_mode),
+                dims=tensor.dims,
+                statics=statics,
+                config=config,
+            )
 
 
 def _mode_sched(tensor, d: int, config: ExecutionConfig) -> ModeSched:
@@ -224,9 +240,10 @@ def mttkrp(state: EngineState, factors: Sequence[jax.Array],
         donate = (0,) if state.config.resolve_donate() else ()
         fn = _JIT_CACHE[key] = jax.jit(run, donate_argnums=donate)
     DISPATCH_COUNTS["mttkrp"] += 1
-    (nval, nidx, nalpha), out = fn(
-        (state.val, state.idx, state.alpha), state.relabel, state.sched,
-        tuple(factors))
+    with span("engine.dispatch", kind="mttkrp", mode=d):
+        (nval, nidx, nalpha), out = fn(
+            (state.val, state.idx, state.alpha), state.relabel, state.sched,
+            tuple(factors))
     nxt = (d + 1) % state.nmodes
     return out, state.replace(val=nval, idx=nidx, alpha=nalpha, mode=nxt)
 
@@ -296,9 +313,10 @@ def all_modes(state: EngineState, factors: Sequence[jax.Array], *,
         fn = _JIT_CACHE[key] = jax.jit(_build_scan(state, fold),
                                        donate_argnums=donate)
     DISPATCH_COUNTS["all_modes"] += 1
-    layout3, outs, out_factors, out_carry = fn(
-        (state.val, state.idx, state.alpha), state.relabel, state.sched,
-        tuple(factors), carry)
+    with span("engine.dispatch", kind="all_modes", start_mode=state.mode):
+        layout3, outs, out_factors, out_carry = fn(
+            (state.val, state.idx, state.alpha), state.relabel, state.sched,
+            tuple(factors), carry)
     nval, nidx, nalpha = layout3
     next_state = state.replace(val=nval, idx=nidx, alpha=nalpha)
     if fold is None:

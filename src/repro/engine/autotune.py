@@ -34,6 +34,8 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.obs.trace import span
+
 from .factory import SPACE_DIMS, PlanSpace, PlanSpec
 
 
@@ -312,38 +314,48 @@ def autotune(indices, values, dims,
         cache = PlanCache()
     indices = np.ascontiguousarray(np.asarray(indices, dtype=np.int32))
     nnz = int(indices.shape[0])
-    degrees = _mode_degrees(indices, dims)
+    with span("autotune", nnz=nnz, top_k=top_k,
+              measured=measure is not None) as tune_sp:
+        degrees = _mode_degrees(indices, dims)
 
-    # stage 1: rank the whole space analytically
-    specs = space.specs()
-    analytic = {s: analytic_cost(degrees, dims, nnz, s) for s in specs}
-    ranked = sorted(specs, key=lambda s: (analytic[s], specs.index(s)))
-    default = space.base.canonical()
-    candidates = list(dict.fromkeys(
-        [default] + ranked[:max(1, top_k)]))
+        # stage 1: rank the whole space analytically
+        specs = space.specs()
+        with span("autotune.analytic", space_size=len(specs)):
+            analytic = {s: analytic_cost(degrees, dims, nnz, s)
+                        for s in specs}
+        ranked = sorted(specs, key=lambda s: (analytic[s], specs.index(s)))
+        default = space.base.canonical()
+        candidates = list(dict.fromkeys(
+            [default] + ranked[:max(1, top_k)]))
 
-    # stage 2: exact modeled cost on built plans (through the cache)
-    modeled = {}
-    for s in candidates:
-        t = _build_for(s, indices, values, dims, cache)
-        modeled[s] = modeled_cost(t, s)
-    best = min(candidates, key=lambda s: (modeled[s], candidates.index(s)))
+        # stage 2: exact modeled cost on built plans (through the cache)
+        modeled = {}
+        with span("autotune.exact", candidates=len(candidates)):
+            for s in candidates:
+                t = _build_for(s, indices, values, dims, cache)
+                modeled[s] = modeled_cost(t, s)
+        best = min(candidates,
+                   key=lambda s: (modeled[s], candidates.index(s)))
 
-    # stage 3 (optional): measured hill-climb from the modeled winner
-    measured: dict = {}
-    trace: list = []
-    if measure is not None:
-        def memo_measure(spec: PlanSpec) -> float:
-            t = float(measure(spec))
-            measured[spec] = t
-            return t
+        # stage 3 (optional): measured hill-climb from the modeled winner
+        measured: dict = {}
+        trace: list = []
+        if measure is not None:
+            def memo_measure(spec: PlanSpec) -> float:
+                with span("autotune.measure", backend=spec.backend,
+                          schedule=spec.schedule, block_p=spec.block_p):
+                    t = float(measure(spec))
+                measured[spec] = t
+                return t
 
-        best, trace = hill_climb(best, candidates, memo_measure,
-                                 seed=seed, max_steps=max_steps)
+            with span("autotune.hill_climb", max_steps=max_steps):
+                best, trace = hill_climb(best, candidates, memo_measure,
+                                         seed=seed, max_steps=max_steps)
+        tune_sp.set("n_measured", len(measured))
 
-    return AutotuneResult(best=best, default=default, analytic=analytic,
-                          modeled=modeled, measured=measured, trace=trace,
-                          seed=seed)
+        return AutotuneResult(best=best, default=default, analytic=analytic,
+                              modeled=modeled, measured=measured,
+                              trace=trace, seed=seed)
 
 
 __all__ = ["analytic_cost", "modeled_cost", "hill_climb", "autotune",

@@ -57,6 +57,8 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.obs.metrics import gauge as _obs_gauge
+from repro.obs.trace import span
 from repro.sharding import ShardingCtx
 
 from .api import _JIT_CACHE, DISPATCH_COUNTS, TRACE_COUNTS, FoldFn
@@ -375,57 +377,69 @@ def shard_state(state: EngineState, mesh: Mesh | ShardingCtx,
                 "(e.g. via core.distributed.build_sharded_flycoo)")
 
     n, m0 = state.nmodes, state.mode
-    statics = state.statics
-    geoms = [_block_geometry(statics[d], np.asarray(state.sched[d].bpart),
-                             n_dev) for d in range(n)]
-    lstatics = tuple(_local_static(statics[d], geoms[d][3], n_dev)
-                     for d in range(n))
-    slocs = [ls.padded_nnz for ls in lstatics]
-    smax_loc = max(slocs)
-    total = n_dev * smax_loc
+    with span("dist.shard_state", n_dev=int(n_dev), nmodes=n):
+        statics = state.statics
+        with span("dist.renumber"):
+            geoms = [_block_geometry(statics[d],
+                                     np.asarray(state.sched[d].bpart),
+                                     n_dev) for d in range(n)]
+            lstatics = tuple(_local_static(statics[d], geoms[d][3], n_dev)
+                             for d in range(n))
+            slocs = [ls.padded_nnz for ls in lstatics]
+            smax_loc = max(slocs)
+            total = n_dev * smax_loc
 
-    alpha = np.asarray(state.alpha)
-    alive = alpha[:, m0] >= 0
-    slots = alpha[alive].astype(np.int64)           # (nnz, n) per-mode slots
-    # device-major renumbering: each device's contiguous block run starts
-    # at local slot 0 -> dslot = dev * smax_loc + (slot - first slot of dev)
-    dslots = np.empty_like(slots)
-    devs = np.empty_like(slots)
-    for d in range(n):
-        _, blocks_per_dev, dev_first_block, _ = geoms[d]
-        p = statics[d].block_p
-        dev_of_block = np.repeat(np.arange(n_dev), blocks_per_dev)
-        dev = dev_of_block[slots[:, d] // p]
-        dslots[:, d] = dev * smax_loc + slots[:, d] - dev_first_block[dev] * p
-        devs[:, d] = dev
-    schedule = _schedule_from_devs([devs[:, d] for d in range(n)], n_dev,
-                                   dist.pad_hop)
+            alpha = np.asarray(state.alpha)
+            alive = alpha[:, m0] >= 0
+            slots = alpha[alive].astype(np.int64)   # (nnz, n) per-mode slots
+            # device-major renumbering: each device's contiguous block run
+            # starts at local slot 0 ->
+            # dslot = dev * smax_loc + (slot - first slot of dev)
+            dslots = np.empty_like(slots)
+            devs = np.empty_like(slots)
+            for d in range(n):
+                _, blocks_per_dev, dev_first_block, _ = geoms[d]
+                p = statics[d].block_p
+                dev_of_block = np.repeat(np.arange(n_dev), blocks_per_dev)
+                dev = dev_of_block[slots[:, d] // p]
+                dslots[:, d] = (dev * smax_loc + slots[:, d]
+                                - dev_first_block[dev] * p)
+                devs[:, d] = dev
+        with span("dist.exchange_schedule"):
+            schedule = _schedule_from_devs([devs[:, d] for d in range(n)],
+                                           n_dev, dist.pad_hop)
+            wire = _obs_gauge("dist_exchange_bytes",
+                             "permute wire bytes per mode transition")
+            for hop in exchange_bytes(schedule, n, slocs):
+                wire.set(f"mode{hop['mode']}", hop["permute_bytes"])
 
-    pos = dslots[:, m0]
-    val = np.zeros(total, dtype=np.float32)
-    idx = np.zeros((total, n), dtype=np.int32)
-    nalpha = np.full((total, n), -1, dtype=np.int32)
-    val[pos] = np.asarray(state.val)[alive]
-    idx[pos] = np.asarray(state.idx)[alive]
-    nalpha[pos] = dslots.astype(np.int32)
+        pos = dslots[:, m0]
+        val = np.zeros(total, dtype=np.float32)
+        idx = np.zeros((total, n), dtype=np.int32)
+        nalpha = np.full((total, n), -1, dtype=np.int32)
+        val[pos] = np.asarray(state.val)[alive]
+        idx[pos] = np.asarray(state.idx)[alive]
+        nalpha[pos] = dslots.astype(np.int32)
 
-    da = dist.data_axis
-    sh1 = NamedSharding(mesh, P(da))
-    sh2 = NamedSharding(mesh, P(da, None))
-    rep = NamedSharding(mesh, P())
-    sched = tuple(
-        _place_sched(_local_sched(state.sched[d], statics[d], geoms[d],
-                                  n_dev), mesh, da)
-        for d in range(n))
-    return DistState(
-        val=jax.device_put(jnp.asarray(val), sh1),
-        idx=jax.device_put(jnp.asarray(idx), sh2),
-        alpha=jax.device_put(jnp.asarray(nalpha), sh2),
-        relabel=tuple(jax.device_put(r, rep) for r in state.relabel),
-        sched=sched,
-        mode=m0, dims=state.dims, statics=statics, lstatics=lstatics,
-        config=state.config, dist=dist, n_dev=n_dev, schedule=schedule,
-        mesh=mesh)
+        da = dist.data_axis
+        sh1 = NamedSharding(mesh, P(da))
+        sh2 = NamedSharding(mesh, P(da, None))
+        rep = NamedSharding(mesh, P())
+        with span("dist.device_place"):
+            sched = tuple(
+                _place_sched(_local_sched(state.sched[d], statics[d],
+                                          geoms[d], n_dev), mesh, da)
+                for d in range(n))
+            return DistState(
+                val=jax.device_put(jnp.asarray(val), sh1),
+                idx=jax.device_put(jnp.asarray(idx), sh2),
+                alpha=jax.device_put(jnp.asarray(nalpha), sh2),
+                relabel=tuple(jax.device_put(r, rep)
+                              for r in state.relabel),
+                sched=sched,
+                mode=m0, dims=state.dims, statics=statics,
+                lstatics=lstatics, config=state.config, dist=dist,
+                n_dev=n_dev, schedule=schedule, mesh=mesh)
 
 
 def _sched_pspecs(ms: ModeSched, da: str) -> ModeSched:
@@ -654,9 +668,11 @@ def dist_mttkrp(dstate: DistState, factors: Sequence[jax.Array]):
         fn = _JIT_CACHE[key] = jax.jit(_build_dist_step(dstate),
                                        donate_argnums=donate)
     DISPATCH_COUNTS["dist_mttkrp"] += 1
-    (nval, nidx, nalpha), out = fn(
-        (dstate.val, dstate.idx, dstate.alpha), dstate.relabel,
-        dstate.sched, tuple(factors), None)
+    with span("engine.dispatch", kind="dist_mttkrp", mode=dstate.mode,
+              n_dev=int(dstate.n_dev)):
+        (nval, nidx, nalpha), out = fn(
+            (dstate.val, dstate.idx, dstate.alpha), dstate.relabel,
+            dstate.sched, tuple(factors), None)
     nxt = (dstate.mode + 1) % dstate.nmodes
     return out, dstate.replace(val=nval, idx=nidx, alpha=nalpha, mode=nxt)
 
@@ -677,9 +693,11 @@ def dist_all_modes(dstate: DistState, factors: Sequence[jax.Array], *,
         fn = _JIT_CACHE[key] = jax.jit(_build_dist_scan(dstate, fold),
                                        donate_argnums=donate)
     DISPATCH_COUNTS["dist_all_modes"] += 1
-    layout3, outs, out_factors, out_carry = fn(
-        (dstate.val, dstate.idx, dstate.alpha), dstate.relabel,
-        dstate.sched, tuple(factors), carry)
+    with span("engine.dispatch", kind="dist_all_modes",
+              start_mode=dstate.mode, n_dev=int(dstate.n_dev)):
+        layout3, outs, out_factors, out_carry = fn(
+            (dstate.val, dstate.idx, dstate.alpha), dstate.relabel,
+            dstate.sched, tuple(factors), carry)
     nval, nidx, nalpha = layout3
     next_state = dstate.replace(val=nval, idx=nidx, alpha=nalpha)
     if fold is None:

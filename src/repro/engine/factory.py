@@ -182,6 +182,7 @@ def make_engine(tensor, spec: PlanSpec | None = None, *,
     """
     from repro.core.flycoo import FlycooTensor
     from repro.core.plancache import DEFAULT_CACHE
+    from repro.obs.trace import span
 
     from .api import init
     from .stream import resident_bytes, stream_init
@@ -193,42 +194,47 @@ def make_engine(tensor, spec: PlanSpec | None = None, *,
     elif cache is False:
         cache = None
 
-    if mesh is not None and not isinstance(tensor, FlycooTensor):
-        # raw COO + mesh: per-mode kappa rounded to the device count so
-        # every device owns an equal, contiguous run of partitions
-        indices, values, dims = tensor
-        n_dev = int(mesh.shape[data_axis])
-        kappas = [config.kappa_for(int(d), n_dev) for d in dims]
-        builder = cache.get_tensor if cache is not None else None
-        if builder is None:
-            from repro.core.flycoo import build_flycoo as builder
-        tensor = builder(indices, values, dims, kappa=kappas,
-                         rows_pp=config.resolve_rows_pp(),
-                         block_p=config.block_p, schedule=config.schedule)
+    with span("factory.make_engine", backend=spec.backend,
+              schedule=spec.schedule, residency=spec.residency,
+              sharded=mesh is not None) as sp:
+        if mesh is not None and not isinstance(tensor, FlycooTensor):
+            # raw COO + mesh: per-mode kappa rounded to the device count so
+            # every device owns an equal, contiguous run of partitions
+            indices, values, dims = tensor
+            n_dev = int(mesh.shape[data_axis])
+            kappas = [config.kappa_for(int(d), n_dev) for d in dims]
+            builder = cache.get_tensor if cache is not None else None
+            if builder is None:
+                from repro.core.flycoo import build_flycoo as builder
+            tensor = builder(indices, values, dims, kappa=kappas,
+                             rows_pp=config.resolve_rows_pp(),
+                             block_p=config.block_p,
+                             schedule=config.schedule)
 
-    residency = spec.residency
-    if residency == "auto":
-        # plans are needed to size the resident footprint; build once
-        # through the cache and hand the planned tensor down either tier
-        from .api import _as_flycoo
+        residency = spec.residency
+        if residency == "auto":
+            # plans are needed to size the resident footprint; build once
+            # through the cache and hand the planned tensor down either tier
+            from .api import _as_flycoo
 
-        tensor = _as_flycoo(tensor, config, cache=cache)
-        over = (config.device_budget_bytes is not None
-                and resident_bytes(tensor, config)
-                > config.device_budget_bytes)
-        residency = "stream" if (over and mesh is None) else "full"
+            tensor = _as_flycoo(tensor, config, cache=cache)
+            over = (config.device_budget_bytes is not None
+                    and resident_bytes(tensor, config)
+                    > config.device_budget_bytes)
+            residency = "stream" if (over and mesh is None) else "full"
+        sp.set("resolved_residency", residency)
 
-    if residency == "stream":
-        if mesh is not None:
-            raise ValueError(
-                "residency='stream' is a single-device tier; drop mesh or "
-                "use residency='full'")
-        return stream_init(tensor, config, start_mode, cache=cache)
+        if residency == "stream":
+            if mesh is not None:
+                raise ValueError(
+                    "residency='stream' is a single-device tier; drop mesh "
+                    "or use residency='full'")
+            return stream_init(tensor, config, start_mode, cache=cache)
 
-    state = init(tensor, config, start_mode, cache=cache)
-    if mesh is None:
-        return state
-    return shard_state(state, mesh, spec.to_dist_config(data_axis))
+        state = init(tensor, config, start_mode, cache=cache)
+        if mesh is None:
+            return state
+        return shard_state(state, mesh, spec.to_dist_config(data_axis))
 
 
 __all__ = ["PlanSpec", "PlanSpace", "make_engine", "SPACE_DIMS"]

@@ -62,6 +62,10 @@ from jax import lax
 
 from repro.core.partition import (ChunkSchedule, chunk_bpart,
                                   chunk_schedule)
+from repro.obs.metrics import counter as _obs_counter
+from repro.obs.metrics import gauge as _obs_gauge
+from repro.obs.probe import device_peak_bytes
+from repro.obs.trace import span
 
 from .api import _JIT_CACHE, DISPATCH_COUNTS, TRACE_COUNTS, _as_flycoo
 from .backends import get_backend
@@ -281,7 +285,32 @@ class StreamStats:
             "peak_ring_bytes": self.peak_ring_bytes,
             "peak_ring_chunks": self.peak_ring_chunks,
             "overlap_efficiency": self.overlap_efficiency,
+            "device_peak_bytes": device_peak_bytes(),
         }
+
+
+def _mirror_stats(stats: StreamStats, before: StreamStats) -> None:
+    """Mirror one mode pass's :class:`StreamStats` deltas onto the
+    ``repro.obs`` metrics registry, so exported traces carry the
+    count-derived transfer/overlap numbers next to the spans they are
+    cross-checked against (the CI ``obs-smoke`` gate compares the two)."""
+    counts = _obs_counter("stream_counts",
+                          "streamed uploads / chunks / mode passes")
+    counts.inc("uploads", stats.uploads - before.uploads)
+    counts.inc("overlapped_uploads",
+               stats.overlapped_uploads - before.overlapped_uploads)
+    counts.inc("chunks", stats.chunks_streamed - before.chunks_streamed)
+    counts.inc("modes", 1)
+    nbytes = _obs_counter("stream_bytes",
+                          "streamed transfer bytes by direction")
+    nbytes.inc("h2d", stats.h2d_bytes - before.h2d_bytes)
+    nbytes.inc("fragment", stats.fragment_bytes - before.fragment_bytes)
+    peaks = _obs_gauge("stream_peaks", "chunk ring high-water marks")
+    peaks.max("ring_bytes", stats.peak_ring_bytes)
+    peaks.max("ring_chunks", stats.peak_ring_chunks)
+    dev_peak = device_peak_bytes()
+    if dev_peak is not None:
+        peaks.max("device_bytes", dev_peak)
 
 
 @dataclasses.dataclass
@@ -339,31 +368,35 @@ def stream_init(tensor, config: ExecutionConfig | None = None,
     never sees more than the chunk ring.
     """
     config = config or ExecutionConfig()
-    tensor = _as_flycoo(tensor, config, cache=cache)
-    n = tensor.nmodes
-    if not 0 <= start_mode < n:
-        raise ValueError(f"start_mode {start_mode} out of range for {n} modes")
-    statics = tuple(mode_static_from_plan(p) for p in tensor.plans)
-    plan = plan_stream(tensor, config)
+    with span("stream.init", start_mode=start_mode) as sp:
+        tensor = _as_flycoo(tensor, config, cache=cache)
+        n = tensor.nmodes
+        if not 0 <= start_mode < n:
+            raise ValueError(
+                f"start_mode {start_mode} out of range for {n} modes")
+        statics = tuple(mode_static_from_plan(p) for p in tensor.plans)
+        plan = plan_stream(tensor, config)
+        sp.set("total_chunks", plan.total_chunks)
+        sp.set("target_slots", plan.target_slots)
 
-    base = tensor.plans[start_mode]
-    s = base.padded_nnz
-    val = np.zeros(s, dtype=np.float32)
-    idx = np.zeros((s, n), dtype=np.int32)
-    alpha = np.full((s, n), -1, dtype=np.int32)
-    val[base.slot_of_elem] = tensor.values
-    idx[base.slot_of_elem] = tensor.indices
-    for d in range(n):
-        alpha[base.slot_of_elem, d] = \
-            tensor.plans[d].slot_of_elem.astype(np.int32)
+        base = tensor.plans[start_mode]
+        s = base.padded_nnz
+        val = np.zeros(s, dtype=np.float32)
+        idx = np.zeros((s, n), dtype=np.int32)
+        alpha = np.full((s, n), -1, dtype=np.int32)
+        val[base.slot_of_elem] = tensor.values
+        idx[base.slot_of_elem] = tensor.indices
+        for d in range(n):
+            alpha[base.slot_of_elem, d] = \
+                tensor.plans[d].slot_of_elem.astype(np.int32)
 
-    return StreamState(
-        tensor=tensor, plan=plan, statics=statics,
-        val=val, idx=idx, alpha=alpha,
-        lrow=_host_lrow(base, idx, alpha, start_mode),
-        relabel=tuple(jnp.asarray(p.row_relabel) for p in tensor.plans),
-        mode=int(start_mode), dims=tensor.dims, config=config,
-        stats=StreamStats())
+        return StreamState(
+            tensor=tensor, plan=plan, statics=statics,
+            val=val, idx=idx, alpha=alpha,
+            lrow=_host_lrow(base, idx, alpha, start_mode),
+            relabel=tuple(jnp.asarray(p.row_relabel) for p in tensor.plans),
+            mode=int(start_mode), dims=tensor.dims, config=config,
+            stats=StreamStats())
 
 
 # --------------------------------------------------------------------------
@@ -472,46 +505,57 @@ def stream_mttkrp(state: StreamState, factors: Sequence[jax.Array],
     nidx = np.zeros((snxt, n), dtype=np.int32)
     nalpha = np.full((snxt, n), -1, dtype=np.int32)
 
+    before = dataclasses.replace(stats)
     ring: dict[int, dict] = {}
     chunk_bytes = 0
-    for c in range(cs.nchunks):
-        # prefetch: keep chunks [c, c + ring) resident/uploading — chunk
-        # c+1's H2D overlaps chunk c's kernel (async dispatch)
-        for k in range(c, min(c + config.stream_ring, cs.nchunks)):
-            if k not in ring:
-                host = _chunk_host_arrays(state, d, k, tables)
-                ring[k] = {key: jax.device_put(a) for key, a in host.items()}
-                if not chunk_bytes:
-                    chunk_bytes = sum(a.nbytes for a in host.values())
-                stats.h2d_bytes += sum(a.nbytes for a in host.values())
-                stats.uploads += 1
-                if k > c:
-                    stats.overlapped_uploads += 1
-        stats.peak_ring_chunks = max(stats.peak_ring_chunks, len(ring))
-        stats.peak_ring_bytes = max(stats.peak_ring_bytes,
-                                    len(ring) * chunk_bytes)
-        dev = ring.pop(c)
-        DISPATCH_COUNTS["stream_ec"] += 1
-        acc = step(acc, dev, factors, np.int32(cs.part_start[c] * rows_pp))
-        del dev  # ring slot freed once the dispatched step completes
+    with span("stream.mode", mode=d, nchunks=cs.nchunks):
+        for c in range(cs.nchunks):
+            # prefetch: keep chunks [c, c + ring) resident/uploading —
+            # chunk c+1's H2D overlaps chunk c's kernel (async dispatch)
+            for k in range(c, min(c + config.stream_ring, cs.nchunks)):
+                if k not in ring:
+                    with span("stream.upload", chunk=k,
+                              prefetch=k > c) as up:
+                        host = _chunk_host_arrays(state, d, k, tables)
+                        ring[k] = {key: jax.device_put(a)
+                                   for key, a in host.items()}
+                        nbytes = sum(a.nbytes for a in host.values())
+                        up.set("bytes", nbytes)
+                    if not chunk_bytes:
+                        chunk_bytes = nbytes
+                    stats.h2d_bytes += nbytes
+                    stats.uploads += 1
+                    if k > c:
+                        stats.overlapped_uploads += 1
+            stats.peak_ring_chunks = max(stats.peak_ring_chunks, len(ring))
+            stats.peak_ring_bytes = max(stats.peak_ring_bytes,
+                                        len(ring) * chunk_bytes)
+            dev = ring.pop(c)
+            DISPATCH_COUNTS["stream_ec"] += 1
+            with span("stream.compute", chunk=c):
+                acc = step(acc, dev, factors,
+                           np.int32(cs.part_start[c] * rows_pp))
+            del dev  # ring slot freed once the dispatched step completes
 
-        # host-side remap fragment for chunk c (real slots only) while the
-        # device crunches: scatter this chunk's alive elements into the
-        # next-mode layout through alpha[:, nxt]
-        _, _, b0, b1 = cs.bounds(c)
-        sl = slice(b0 * cs.block_p, b1 * cs.block_p)
-        av = state.alpha[sl]
-        alive = av[:, d] >= 0
-        dst = av[alive, nxt]
-        nval[dst] = state.val[sl][alive]
-        nidx[dst] = state.idx[sl][alive]
-        nalpha[dst] = av[alive]
-        stats.fragment_bytes += int(alive.sum()) * row_bytes(n)
-        stats.chunks_streamed += 1
+            # host-side remap fragment for chunk c (real slots only) while
+            # the device crunches: scatter this chunk's alive elements into
+            # the next-mode layout through alpha[:, nxt]
+            with span("stream.remap", chunk=c):
+                _, _, b0, b1 = cs.bounds(c)
+                sl = slice(b0 * cs.block_p, b1 * cs.block_p)
+                av = state.alpha[sl]
+                alive = av[:, d] >= 0
+                dst = av[alive, nxt]
+                nval[dst] = state.val[sl][alive]
+                nidx[dst] = state.idx[sl][alive]
+                nalpha[dst] = av[alive]
+            stats.fragment_bytes += int(alive.sum()) * row_bytes(n)
+            stats.chunks_streamed += 1
 
-    out_rel = acc[: st.kappa * rows_pp]
-    out = jnp.take(out_rel, state.relabel[d], axis=0)
+        out_rel = acc[: st.kappa * rows_pp]
+        out = jnp.take(out_rel, state.relabel[d], axis=0)
     stats.modes_streamed += 1
+    _mirror_stats(stats, before)
     nxt_plan = state.tensor.plans[nxt]
     return out, state.replace(
         val=nval, idx=nidx, alpha=nalpha,
@@ -567,11 +611,16 @@ def cp_als_stream(tensor, rank: int, iters: int = 10, key=None,
         np.sum(state.tensor.values.astype(np.float64) ** 2))
 
     fits = []
-    for _ in range(iters):
-        outs, state, factors, lam = stream_all_modes(
-            state, factors, fold=_als_fold, carry=lam)
-        if track_fit:
-            fits.append(_fit(norm_x_sq, outs[n - 1], factors, lam))
+    for i in range(iters):
+        with span("cpd.sweep", sweep=i, streamed=True) as sp:
+            outs, state, factors, lam = stream_all_modes(
+                state, factors, fold=_als_fold, carry=lam)
+            if track_fit:
+                fit = _fit(norm_x_sq, outs[n - 1], factors, lam)
+                fits.append(fit)
+                sp.set("fit", float(fit))
+                _obs_gauge("cpd_fit", "latest ALS fit per tier").set(
+                    "streamed", float(fit))
     return CPDResult(factors=list(factors), lam=lam, fits=fits)
 
 

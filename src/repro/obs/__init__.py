@@ -1,0 +1,50 @@
+"""repro.obs — unified tracing + metrics for the FLYCOO engine.
+
+One observability surface across every layer: hierarchical wall-clock
+spans (:mod:`~repro.obs.trace`) over plan → autotune → stream → dist →
+ALS sweep → backend dispatch, a labeled counter/gauge/histogram registry
+(:mod:`~repro.obs.metrics`), Chrome-trace / JSONL / manifest exporters
+(:mod:`~repro.obs.export`), run summaries plus the span-derived overlap
+cross-check (:mod:`~repro.obs.report`), and peak-memory probes
+(:mod:`~repro.obs.probe`).
+
+Quick start::
+
+    from repro import obs
+
+    obs.enable()                      # or: REPRO_TRACE=1 / =trace.json
+    result = cp_als(tensor, rank=8)
+    obs.write_chrome_trace("trace.json")   # load in ui.perfetto.dev
+    print(obs.render_report())
+
+Everything is zero-dependency and free when disabled: the module-level
+:func:`span` is a single ``is None`` test returning a shared no-op when
+no tracer is installed (CI gates traced entry points at < 5% overhead
+with tracing off).
+"""
+from .export import (chrome_trace, run_manifest, validate_chrome_trace,
+                     write_chrome_trace, write_jsonl)
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry, REGISTRY,
+                      counter, gauge, histogram)
+from .probe import device_peak_bytes, memory_probe
+from .report import (render_report, stream_overlap_from_chrome,
+                     stream_overlap_from_spans, time_tree)
+from .trace import (ENV_VAR, NULL_SPAN, SpanRecord, Tracer, disable, enable,
+                    get_tracer, is_enabled, span, traced)
+
+__all__ = [
+    # trace
+    "span", "traced", "Tracer", "SpanRecord", "NULL_SPAN", "enable",
+    "disable", "is_enabled", "get_tracer", "ENV_VAR",
+    # metrics
+    "REGISTRY", "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "counter", "gauge", "histogram",
+    # export
+    "chrome_trace", "write_chrome_trace", "write_jsonl", "run_manifest",
+    "validate_chrome_trace",
+    # report
+    "render_report", "time_tree", "stream_overlap_from_spans",
+    "stream_overlap_from_chrome",
+    # probe
+    "memory_probe", "device_peak_bytes",
+]

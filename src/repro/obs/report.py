@@ -1,0 +1,233 @@
+"""Run summaries over collected spans + metrics.
+
+:func:`render_report` turns a tracer + registry into a human-readable
+text/markdown summary: the per-phase wall-time tree (aggregated over
+span paths, with self-time), the plan-cache hit taxonomy, and the
+streamed transfer-vs-compute split.
+
+This module also owns the **span-derived overlap efficiency** — the
+profiler-timeline cross-check of ``StreamStats.overlap_efficiency``
+(which counts prefetched uploads).  A ``stream.upload`` span counts as
+*overlapped* exactly when some ``stream.compute`` span of an **earlier**
+chunk in the same mode pass starts after the upload starts: the upload
+was issued ahead of the compute frontier, i.e. it ran while earlier
+chunks were still in flight.  The rule needs only span timestamps and
+``chunk`` attrs, so it applies equally to live :class:`SpanRecord`s
+(:func:`stream_overlap_from_spans`) and to an exported Chrome trace
+(:func:`stream_overlap_from_chrome` — what the CI gate uses).
+"""
+from __future__ import annotations
+
+from .metrics import REGISTRY, MetricsRegistry
+from .trace import Tracer, get_tracer
+
+__all__ = ["time_tree", "render_report", "stream_overlap_from_spans",
+           "stream_overlap_from_chrome"]
+
+
+# --------------------------------------------------------------------------
+# Per-phase time tree.
+# --------------------------------------------------------------------------
+class _Node:
+    __slots__ = ("name", "count", "total_ns", "child_ns", "children")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.count = 0
+        self.total_ns = 0
+        self.child_ns = 0
+        self.children: dict[str, _Node] = {}
+
+    @property
+    def self_ns(self) -> int:
+        return max(self.total_ns - self.child_ns, 0)
+
+
+def time_tree(spans) -> dict[str, _Node]:
+    """Aggregate spans into a tree keyed by span *path* (the stack of
+    names from a root span down), merging repeats: each node carries its
+    invocation count, total wall time, and self time (total minus the
+    time attributed to child spans)."""
+    by_id = {s.span_id: s for s in spans}
+    roots: dict[str, _Node] = {}
+
+    def path_of(s):
+        names = [s.name]
+        seen = {s.span_id}
+        while s.parent_id is not None:
+            s = by_id.get(s.parent_id)
+            if s is None or s.span_id in seen:  # cross-thread / partial
+                break
+            seen.add(s.span_id)
+            names.append(s.name)
+        return tuple(reversed(names))
+
+    for s in spans:
+        path = path_of(s)
+        level = roots
+        node = None
+        for name in path:
+            node = level.get(name)
+            if node is None:
+                node = level[name] = _Node(name)
+            level = node.children
+        node.count += 1
+        node.total_ns += s.duration_ns
+        if s.parent_id is not None:
+            parent = by_id.get(s.parent_id)
+            if parent is not None:
+                # attribute child time to the parent node
+                pnode = roots
+                target = None
+                for name in path[:-1]:
+                    target = pnode.get(name)
+                    if target is None:
+                        break
+                    pnode = target.children
+                if target is not None:
+                    target.child_ns += s.duration_ns
+    return roots
+
+
+def _render_tree(roots: dict[str, _Node], indent: str = "  ") -> list[str]:
+    lines: list[str] = []
+
+    def fmt_ms(ns: int) -> str:
+        return f"{ns / 1e6:10.3f}ms"
+
+    def walk(nodes: dict[str, _Node], depth: int):
+        for node in sorted(nodes.values(), key=lambda n: -n.total_ns):
+            lines.append(
+                f"{indent * depth}{node.name:<{max(34 - depth * 2, 8)}}"
+                f" x{node.count:<5d} total {fmt_ms(node.total_ns)}"
+                f"  self {fmt_ms(node.self_ns)}")
+            walk(node.children, depth + 1)
+
+    walk(roots, 0)
+    return lines
+
+
+# --------------------------------------------------------------------------
+# Span-derived overlap efficiency (the profiler-timeline cross-check).
+# --------------------------------------------------------------------------
+def _overlap_from_events(events) -> float | None:
+    """``events``: iterables of ``(name, parent_id, start, chunk)``.
+    Applies the module-docstring rule; returns ``None`` with no uploads."""
+    uploads: dict[object, list] = {}
+    computes: dict[object, list] = {}
+    for name, parent, start, chunk in events:
+        if chunk is None:
+            continue
+        if name == "stream.upload":
+            uploads.setdefault(parent, []).append((start, chunk))
+        elif name == "stream.compute":
+            computes.setdefault(parent, []).append((start, chunk))
+    total = overlapped = 0
+    for parent, ups in uploads.items():
+        comps = computes.get(parent, [])
+        for u_start, u_chunk in ups:
+            total += 1
+            if any(c_start > u_start and c_chunk < u_chunk
+                   for c_start, c_chunk in comps):
+                overlapped += 1
+    if total == 0:
+        return None
+    return overlapped / total
+
+
+def stream_overlap_from_spans(spans) -> float | None:
+    """Span-derived ``overlap_efficiency`` over live span records (see
+    module docstring for the rule); ``None`` when no ``stream.upload``
+    spans were recorded."""
+    return _overlap_from_events(
+        (s.name, s.parent_id, s.start_ns, s.attrs.get("chunk"))
+        for s in spans)
+
+
+def stream_overlap_from_chrome(trace: dict) -> float | None:
+    """Span-derived ``overlap_efficiency`` recomputed from an exported
+    Chrome trace (the CI ``obs-smoke`` gate's input)."""
+    events = []
+    for e in trace.get("traceEvents", ()):
+        if e.get("ph") != "X":
+            continue
+        args = e.get("args", {})
+        events.append((e.get("name"), args.get("parent_id"), e.get("ts"),
+                       args.get("chunk")))
+    return _overlap_from_events(events)
+
+
+# --------------------------------------------------------------------------
+# The report.
+# --------------------------------------------------------------------------
+def render_report(tracer: Tracer | None = None,
+                  registry: MetricsRegistry | None = None,
+                  fmt: str = "text") -> str:
+    """Text/markdown run summary: phase time tree, cache hit taxonomy,
+    transfer vs compute, and the raw metrics dump."""
+    if fmt not in ("text", "markdown"):
+        raise ValueError(f"fmt must be 'text' or 'markdown', got {fmt!r}")
+    tracer = tracer or get_tracer()
+    registry = registry or REGISTRY
+    spans = tracer.spans() if tracer else ()
+    md = fmt == "markdown"
+
+    def header(title: str) -> list[str]:
+        return [f"## {title}", ""] if md else [title, "-" * len(title)]
+
+    lines: list[str] = []
+    lines += ["# repro run report", ""] if md else \
+        ["repro run report", "=" * 16]
+
+    lines += header(f"Phase time tree ({len(spans)} spans)")
+    tree_lines = _render_tree(time_tree(spans)) or ["(no spans recorded — "
+                                                    "set REPRO_TRACE=1)"]
+    lines += ["```", *tree_lines, "```", ""] if md else tree_lines + [""]
+
+    metrics = {m["name"]: m for m in registry.collect()}
+
+    cache = metrics.get("plan_cache_outcomes", {}).get("values", {})
+    if cache:
+        lines += header("Plan cache taxonomy")
+        total = sum(cache.values())
+        for outcome, n in sorted(cache.items()):
+            lines.append(f"  {outcome:<12} {n:>8}  "
+                         f"({100.0 * n / max(total, 1):.1f}%)")
+        lines.append("")
+
+    stream = metrics.get("stream_bytes", {}).get("values", {})
+    if stream:
+        lines += header("Streaming transfer vs compute")
+        h2d = stream.get("h2d", 0)
+        frag = stream.get("fragment", 0)
+        compute_ns = sum(s.duration_ns for s in spans
+                         if s.name == "stream.compute")
+        upload_ns = sum(s.duration_ns for s in spans
+                        if s.name == "stream.upload")
+        lines.append(f"  h2d bytes      {h2d:>14,}")
+        lines.append(f"  fragment bytes {frag:>14,}")
+        lines.append(f"  upload wall    {upload_ns / 1e6:>12.3f}ms")
+        lines.append(f"  compute wall   {compute_ns / 1e6:>12.3f}ms "
+                     "(dispatch; device time overlaps uploads)")
+        span_eff = stream_overlap_from_spans(spans)
+        if span_eff is not None:
+            lines.append(f"  overlap (span-derived) {span_eff:>7.3f}")
+        counts = metrics.get("stream_counts", {}).get("values", {})
+        ups = counts.get("uploads", 0)
+        if ups:
+            lines.append(f"  overlap (count-derived)"
+                         f" {counts.get('overlapped_uploads', 0) / ups:>7.3f}")
+        lines.append("")
+
+    lines += header("Metrics")
+    if not metrics:
+        lines.append("  (none recorded)")
+    for name, m in sorted(metrics.items()):
+        lines.append(f"  {name} ({m['kind']})")
+        for key, value in sorted(m["values"].items()):
+            if isinstance(value, dict):  # histogram summary
+                mean = value["sum"] / max(value["count"], 1)
+                value = (f"count={value['count']} mean={mean:.6g} "
+                         f"min={value['min']:.6g} max={value['max']:.6g}")
+            lines.append(f"    {key:<28} {value}")
+    return "\n".join(lines) + "\n"
