@@ -28,6 +28,11 @@ from repro import engine
 from repro.engine import ExecutionConfig
 from repro.obs.metrics import gauge as _obs_gauge
 from repro.obs.trace import span
+from repro.resilience import chaos as _chaos
+from repro.resilience import guard as _guard
+from repro.resilience.ladder import (classify, next_backend,
+                                     record_degradation, resolve_policy)
+from repro.resilience.snapshot import as_store, fingerprint
 
 from .flycoo import FlycooTensor
 from .mttkrp import mttkrp_ref
@@ -68,6 +73,24 @@ def _als_fold(d: int, m_d, factors, lam):
     return tuple(factors[:d]) + (y,) + tuple(factors[d + 1:]), lam
 
 
+#: Ridge strength the recovery fold replays a rolled-back sweep under —
+#: strong enough to dominate a near-singular gram product that NaN'd the
+#: plain solve, small enough to leave a well-conditioned sweep's fixed
+#: point essentially unchanged.
+RECOVERY_EPS = 1e-3
+
+
+def _als_fold_recovery(d: int, m_d, factors, lam):
+    """The Gauss-Seidel update under the stronger :data:`RECOVERY_EPS`
+    ridge — used to replay a sweep after a NaN/Inf burst (see
+    ``resilience.guard``). A separate module-level callable because the
+    fold's identity is part of the engine's jit cache key."""
+    n = len(factors)
+    grams_other = tuple(gram(factors[w]) for w in range(n) if w != d)
+    y, lam = _als_update(m_d, grams_other, RECOVERY_EPS)
+    return tuple(factors[:d]) + (y,) + tuple(factors[d + 1:]), lam
+
+
 @dataclasses.dataclass
 class CPDResult:
     factors: list[jax.Array]
@@ -86,6 +109,11 @@ def cp_als(
     track_fit: bool = True,
     mesh=None,
     dist=None,
+    *,
+    ladder=None,
+    checkpoint=None,
+    checkpoint_every: int = 1,
+    resume: bool = False,
 ) -> CPDResult:
     """Run CPD-ALS for ``iters`` sweeps over all modes (paper Alg. 5 outer).
 
@@ -99,19 +127,38 @@ def cp_als(
     (build with ``core.distributed.build_sharded_flycoo``); ``dist`` is an
     optional ``engine.DistConfig`` (its ``model_axis`` must stay ``None`` —
     the ALS fold needs the full rank on every device).
+
+    Resilience (see :mod:`repro.resilience`):
+
+    * ``ladder``: ``True`` / a :class:`repro.resilience.LadderPolicy`
+      enables the degradation ladder — a compile/lowering failure steps
+      the backend down ``pallas_fused -> pallas -> xla -> ref`` and
+      rebuilds the engine state (bitwise-identical output, every rung) —
+      plus the per-sweep NaN/Inf guard: on a burst the sweep is rolled
+      back and replayed under the stronger :data:`RECOVERY_EPS` ridge.
+      Every transition lands on the obs registry; nothing degrades
+      silently.
+    * ``checkpoint``: a directory or :class:`repro.resilience.
+      SnapshotStore`; every ``checkpoint_every`` completed sweeps the
+      ``(factors, lam, fits)`` state is snapshotted atomically under the
+      problem fingerprint. ``resume=True`` restores the newest intact
+      snapshot *for the same problem* (tensor bytes + rank + config +
+      key) and replays only the remaining sweeps — bitwise-identical
+      final factors vs an uninterrupted run, because at a sweep boundary
+      the layout has rotated back to its start arrangement and
+      ``(factors, lam)`` are the complete dynamic state.
     """
     if config is None:
         config = ExecutionConfig(backend=backend or "xla",
                                  interpret=interpret)
     elif backend is not None or interpret is not None:
         raise ValueError("pass either config or backend/interpret, not both")
+    policy = resolve_policy(ladder)
     if key is None:
         key = jax.random.PRNGKey(0)
     n = tensor.nmodes
     factors = tuple(init_factors(key, tensor.dims, rank))
     lam = jnp.ones((rank,), jnp.float32)
-    state = engine.init(tensor, config)
-    sweep = engine.all_modes
     if mesh is not None:
         from repro.sharding import ShardingCtx
 
@@ -119,24 +166,92 @@ def cp_als(
             # ALS folds inside the sweep, which needs the full rank on
             # every device — never inherit the ctx's tp axis here.
             dist = engine.DistConfig(data_axis=mesh.data_axis)
-        state = engine.dist.shard_state(state, mesh, dist)
-        sweep = engine.dist.dist_all_modes
     elif dist is not None:
         raise ValueError("dist config given without a mesh")
+
+    def build_state(cfg):
+        st = engine.init(tensor, cfg)
+        if mesh is not None:
+            st = engine.dist.shard_state(st, mesh, dist)
+        return st
+
+    state = build_state(config)
+    sweep = engine.all_modes if mesh is None else engine.dist.dist_all_modes
     norm_x_sq = float(np.sum(tensor.values.astype(np.float64) ** 2))
 
-    fits = []
-    for i in range(iters):
+    store = as_store(checkpoint)
+    fits: list = []
+    first = 0
+    fp = None
+    if store is not None:
+        fp = fingerprint(tensor.indices, tensor.values, tensor.dims, rank,
+                         config=config, key=key,
+                         extra="resident" if mesh is None else "dist")
+        if resume:
+            snap = store.latest(fp)
+            if snap is not None:
+                factors = tuple(jnp.asarray(f) for f in snap.factors)
+                lam = jnp.asarray(snap.lam)
+                fits = list(snap.fits)
+                first = snap.sweep
+    backend_steps = 0
+    for i in range(first, iters):
+        cz = _chaos.active()
+        if cz is not None:
+            cz.maybe_kill(i)
+        prev = (factors, lam)
         # One dispatch per sweep: scan over modes, ALS update in the fold.
         with span("cpd.sweep", sweep=i, streamed=False) as sp:
-            outs, state, factors, lam = sweep(
-                state, factors, fold=_als_fold, carry=lam)
+            fold = _als_fold
+            while True:
+                try:
+                    outs, state, factors, lam = sweep(
+                        state, factors, fold=fold, carry=lam)
+                except Exception as exc:
+                    # Compile/lowering failures happen before any factor
+                    # update (the sweep is one program): step the backend
+                    # down a rung, rebuild the state from the tensor (at a
+                    # sweep boundary the layout bitwise-equals a fresh
+                    # init), and retry the sweep.
+                    if policy is None or classify(exc) != "compile" \
+                            or backend_steps >= policy.max_backend_steps:
+                        raise
+                    nb = next_backend(state.config.backend)
+                    if nb is None:
+                        raise
+                    backend_steps += 1
+                    record_degradation("compile", state.config.backend, nb,
+                                       site="cpd.backend", sweep=i)
+                    state = build_state(dataclasses.replace(
+                        state.config, backend=nb))
+                    continue
+                if cz is not None:
+                    factors = tuple(cz.mangle_factors(i, factors))
+                if policy is not None \
+                        and not _guard.all_finite(factors, lam):
+                    if fold is _als_fold_recovery:
+                        raise FloatingPointError(
+                            f"NaN/Inf burst in sweep {i} persisted "
+                            "through the ridge-recovery replay")
+                    # Roll back and replay under the stronger ridge: the
+                    # layout is bitwise back at its start arrangement, so
+                    # the replay sees exactly the pre-sweep problem.
+                    _guard.record_recovery("nan_rollback", sweep=i,
+                                           streamed=False)
+                    factors, lam = prev
+                    fold = _als_fold_recovery
+                    continue
+                break
             if track_fit:
                 fit = _fit(norm_x_sq, outs[n - 1], factors, lam)
                 fits.append(fit)
                 sp.set("fit", float(fit))
                 _obs_gauge("cpd_fit", "latest ALS fit per tier").set(
                     "resident", float(fit))
+        if store is not None and ((i + 1) % checkpoint_every == 0
+                                  or i + 1 == iters):
+            store.save(fp, i + 1, [np.asarray(f) for f in factors],
+                       np.asarray(lam), fits)
     return CPDResult(factors=list(factors), lam=lam, fits=fits)
 
 

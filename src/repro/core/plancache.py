@@ -45,6 +45,8 @@ import numpy as np
 
 from repro.obs.metrics import counter as _obs_counter
 from repro.obs.trace import span as _obs_span
+from repro.resilience import chaos as _chaos
+from repro.resilience.snapshot import payload_digest
 
 from .flycoo import FlycooTensor, build_flycoo
 from .partition import ModePlan, plan_from_structure
@@ -77,6 +79,16 @@ def sparsity_signature(
             np.log2(pos.astype(np.float64)).astype(np.int64), minlength=1)
         hists.append(tuple(int(c) for c in buckets))
     return (tuple(int(x) for x in dims), int(nnz), tuple(hists))
+
+
+def _blob_payload_order(arrays: dict, nmodes: int) -> dict:
+    """The canonical array order the disk-blob digest is computed over —
+    identical at save and load time regardless of npz member order."""
+    ordered = {"indices": arrays["indices"], "meta": arrays["meta"]}
+    for d in range(nmodes):
+        for part in ("relabel", "slot", "partnnz", "bpart"):
+            ordered[f"{part}{d}"] = arrays[f"{part}{d}"]
+    return ordered
 
 
 @dataclasses.dataclass
@@ -119,6 +131,7 @@ class PlanCache:
         self.misses = 0
         self.disk_loads = 0
         self.disk_saves = 0
+        self.disk_corrupt = 0
         self.last_outcome: str | None = None
 
     # ------------------------------------------------------------------ api
@@ -237,6 +250,7 @@ class PlanCache:
             "misses": self.misses,
             "disk_loads": self.disk_loads,
             "disk_saves": self.disk_saves,
+            "disk_corrupt": self.disk_corrupt,
             "entries": sum(len(v) for v in self._by_key.values()),
         }
 
@@ -260,7 +274,15 @@ class PlanCache:
                    schedule) -> FlycooTensor | None:
         """Load-on-miss: reconstruct plans from a persisted blob, serving
         an identity hit (stored element list bitwise-equal) or a
-        structural one (``slot_of_elem`` rebuilt for the new order)."""
+        structural one (``slot_of_elem`` rebuilt for the new order).
+
+        Every load is checksum-verified against the digest the blob was
+        written with (:func:`repro.resilience.snapshot.payload_digest`).
+        A torn, truncated, or bit-rotten blob — anything that fails to
+        parse or verify — is *quarantined* (renamed ``*.corrupt``) and
+        the lookup falls through to a cold rebuild, which re-persists a
+        fresh blob: the disk tier self-heals instead of wedging the run.
+        """
         if self.path is None:
             return None
         fn = os.path.join(
@@ -268,9 +290,15 @@ class PlanCache:
             self._disk_key(dims_t, len(indices), knobs, degrees) + ".npz")
         if not os.path.exists(fn):
             return None
-        with np.load(fn) as blob:
-            stored_idx = blob["indices"]
-            meta = blob["meta"]
+        try:
+            with np.load(fn) as blob:
+                arrays = {name: blob[name] for name in blob.files}
+            stored_idx = arrays["indices"]
+            meta = arrays["meta"]
+            stored_digest = bytes(arrays["digest"]).decode()
+            ordered = _blob_payload_order(arrays, len(dims_t))
+            if payload_digest(ordered) != stored_digest:
+                raise ValueError(f"plan blob digest mismatch: {fn}")
             plans = []
             for d in range(indices.shape[1]):
                 kappa, rows_pp, block_p, blocks_pp, dim, nblocks, \
@@ -278,10 +306,13 @@ class PlanCache:
                 plans.append(ModePlan(
                     mode=d, kappa=kappa, rows_pp=rows_pp, block_p=block_p,
                     blocks_pp=blocks_pp, dim=dim, schedule=schedule,
-                    nblocks=nblocks, row_relabel=blob[f"relabel{d}"],
-                    slot_of_elem=blob[f"slot{d}"],
-                    part_nnz=blob[f"partnnz{d}"],
-                    block_part=blob[f"bpart{d}"], max_degree=max_degree))
+                    nblocks=nblocks, row_relabel=arrays[f"relabel{d}"],
+                    slot_of_elem=arrays[f"slot{d}"],
+                    part_nnz=arrays[f"partnnz{d}"],
+                    block_part=arrays[f"bpart{d}"], max_degree=max_degree))
+        except Exception:
+            self._quarantine(fn)
+            return None
         self.disk_loads += 1
         if np.array_equal(stored_idx, indices):
             self.hits += 1
@@ -297,7 +328,8 @@ class PlanCache:
     def _disk_save(self, t: FlycooTensor, knobs: tuple,
                    degrees: Sequence[np.ndarray]) -> None:
         """Persist a cold plan: content-addressed npz, atomic write (tmp
-        file in the same directory, then ``os.replace``)."""
+        file in the same directory, then ``os.replace``), payload digest
+        embedded so :meth:`_disk_load` can verify integrity."""
         if self.path is None:
             return
         os.makedirs(self.path, exist_ok=True)
@@ -315,11 +347,30 @@ class PlanCache:
             arrays[f"slot{d}"] = p.slot_of_elem
             arrays[f"partnnz{d}"] = p.part_nnz
             arrays[f"bpart{d}"] = p.block_part
+        digest = payload_digest(_blob_payload_order(arrays, t.nmodes))
+        arrays["digest"] = np.frombuffer(digest.encode(), dtype=np.uint8)
         tmp = os.path.join(self.path, f".tmp-{os.getpid()}-{key}")
         with open(tmp, "wb") as f:
             np.savez(f, **arrays)
         os.replace(tmp, fn)
         self.disk_saves += 1
+        cz = _chaos.active()
+        if cz is not None:
+            cz.on_disk_save(fn)
+
+    def _quarantine(self, fn: str) -> None:
+        """Move a corrupt blob aside (``*.corrupt``) so the cold rebuild's
+        fresh ``_disk_save`` can land in its place."""
+        self.disk_corrupt += 1
+        _obs_counter("plan_cache_outcomes",
+                     "plan cache lookups by level (hit/structural/miss)"
+                     ).inc("disk_corrupt")
+        with _obs_span("plan.cache_quarantine",
+                       path=os.path.basename(fn)):
+            try:
+                os.replace(fn, fn + ".corrupt")
+            except OSError:
+                pass
 
     # ------------------------------------------------------------- internal
     def _insert(self, key: tuple, entry: _Entry) -> None:

@@ -106,6 +106,39 @@ Observability (``repro.obs``):
   ``overlap_efficiency`` (``obs.stream_overlap_from_spans``) is the
   profiler-timeline cross-check of ``StreamStats.overlap_efficiency``.
 
+Resilience (``repro.resilience``):
+
+  Long runs survive the failures that used to kill them, and every
+  recovery is observable — never silent:
+
+  * **Degradation ladder** — ``ladder=True`` (or a ``LadderPolicy``) on
+    ``make_engine`` / ``cp_als`` / ``cp_als_stream`` enables policy-driven
+    fallback: a compile/lowering failure steps the backend down
+    ``BACKEND_LADDER`` (``pallas_fused -> pallas -> xla -> ref``; every
+    rung bitwise-identical), a resident-placement OOM drops residency
+    ``full -> stream``, a streamed-chunk OOM halves ``chunk_nnz`` and
+    replans (partition-aligned chunks make ANY chunking bitwise-equal),
+    and transient ``device_put`` upload failures retry with bounded
+    exponential backoff + seeded jitter (attempts surface in
+    ``StreamStats.upload_retries``). Each transition lands on the obs
+    registry as a ``resilience_degradations`` / ``resilience_retries``
+    counter + span.
+  * **Checkpoint/resume** — ``checkpoint=dir`` on ``cp_als`` /
+    ``cp_als_stream`` writes atomic, checksummed sweep snapshots bound to
+    the problem fingerprint; ``resume=True`` restores the newest intact
+    one and continues bitwise-identically (at a sweep boundary
+    ``(factors, lam)`` are the complete dynamic state). Corrupt blobs are
+    quarantined and skipped, same as the ``PlanCache`` disk tier.
+  * **NaN guard** — under a ladder policy each sweep is checked for
+    NaN/Inf; a burst rolls the sweep back and replays it under a
+    stronger ridge (``resilience_recoveries`` counter).
+  * **Chaos** — ``REPRO_CHAOS="upload_fail=1,oom_chunk=3,..."`` installs
+    deterministic seeded fault injectors through the
+    stream/factory/plancache/dispatch hooks;
+    ``obs.resilience_report()`` pairs every injected fault with the
+    resilience event that answered it (the CI chaos gate asserts
+    ``unanswered == []``).
+
 Migration from the deprecated stateful executor:
 
   MTTKRPExecutor(t, backend=b)     -> s = engine.init(t, ExecutionConfig(backend=b))

@@ -30,6 +30,7 @@ from jax import lax
 
 from repro.obs.metrics import REGISTRY
 from repro.obs.trace import span
+from repro.resilience import chaos as _chaos
 
 from .backends import compute_lrow, get_backend
 from .config import ExecutionConfig
@@ -239,6 +240,9 @@ def mttkrp(state: EngineState, factors: Sequence[jax.Array],
 
         donate = (0,) if state.config.resolve_donate() else ()
         fn = _JIT_CACHE[key] = jax.jit(run, donate_argnums=donate)
+    _c = _chaos.active()
+    if _c is not None:
+        _c.on_dispatch(state.config.backend)
     DISPATCH_COUNTS["mttkrp"] += 1
     with span("engine.dispatch", kind="mttkrp", mode=d):
         (nval, nidx, nalpha), out = fn(
@@ -312,6 +316,9 @@ def all_modes(state: EngineState, factors: Sequence[jax.Array], *,
         donate = (0,) if state.config.resolve_donate() else ()
         fn = _JIT_CACHE[key] = jax.jit(_build_scan(state, fold),
                                        donate_argnums=donate)
+    _c = _chaos.active()
+    if _c is not None:
+        _c.on_dispatch(state.config.backend)
     DISPATCH_COUNTS["all_modes"] += 1
     with span("engine.dispatch", kind="all_modes", start_mode=state.mode):
         layout3, outs, out_factors, out_carry = fn(

@@ -30,6 +30,14 @@ SCHEDULES = ("compact", "rect")
 # ``device_budget_bytes``.
 RESIDENCIES = ("auto", "full", "stream")
 
+# Degradation-ladder backend ordering (consumed by ``repro.resilience``):
+# on a compile/lowering failure each backend falls back to the next entry
+# — strictly more portable, bitwise-identical output (the parity property
+# every backend already CI-gates). ``residency`` has its own rung
+# (full -> stream, in ``factory.make_engine``) and the streaming tier
+# halves its chunk budget on OOM; see ``repro.resilience.ladder``.
+BACKEND_LADDER = ("pallas_fused", "pallas", "xla", "ref")
+
 # One budget, two tiers: when only the device (HBM) budget is given, the
 # VMEM share the "vmem" kappa policy sizes row tiles against is derived
 # from it — a fixed fraction capped at a typical per-core VMEM — so
@@ -232,4 +240,5 @@ class ExecutionConfig:
 
 
 __all__ = ["ExecutionConfig", "KAPPA_POLICIES", "SCHEDULES", "RESIDENCIES",
-           "derive_vmem_budget", "platform_default_interpret"]
+           "BACKEND_LADDER", "derive_vmem_budget",
+           "platform_default_interpret"]

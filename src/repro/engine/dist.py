@@ -59,6 +59,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.obs.metrics import gauge as _obs_gauge
 from repro.obs.trace import span
+from repro.resilience import chaos as _chaos
 from repro.sharding import ShardingCtx
 
 from .api import _JIT_CACHE, DISPATCH_COUNTS, TRACE_COUNTS, FoldFn
@@ -667,6 +668,9 @@ def dist_mttkrp(dstate: DistState, factors: Sequence[jax.Array]):
         donate = (0,) if dstate.config.resolve_donate() else ()
         fn = _JIT_CACHE[key] = jax.jit(_build_dist_step(dstate),
                                        donate_argnums=donate)
+    _c = _chaos.active()
+    if _c is not None:
+        _c.on_dispatch(dstate.config.backend)
     DISPATCH_COUNTS["dist_mttkrp"] += 1
     with span("engine.dispatch", kind="dist_mttkrp", mode=dstate.mode,
               n_dev=int(dstate.n_dev)):
@@ -692,6 +696,9 @@ def dist_all_modes(dstate: DistState, factors: Sequence[jax.Array], *,
         donate = (0,) if dstate.config.resolve_donate() else ()
         fn = _JIT_CACHE[key] = jax.jit(_build_dist_scan(dstate, fold),
                                        donate_argnums=donate)
+    _c = _chaos.active()
+    if _c is not None:
+        _c.on_dispatch(dstate.config.backend)
     DISPATCH_COUNTS["dist_all_modes"] += 1
     with span("engine.dispatch", kind="dist_all_modes",
               start_mode=dstate.mode, n_dev=int(dstate.n_dev)):

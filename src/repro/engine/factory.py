@@ -33,6 +33,10 @@ import dataclasses
 import itertools
 from typing import Sequence
 
+from repro.resilience import chaos as _chaos
+from repro.resilience.ladder import (classify, record_degradation,
+                                     resolve_policy)
+
 from .config import SCHEDULES, ExecutionConfig
 from .dist import EXCHANGES, DistConfig, shard_state
 
@@ -161,7 +165,7 @@ class PlanSpace:
 
 def make_engine(tensor, spec: PlanSpec | None = None, *,
                 start_mode: int = 0, cache=None, mesh=None,
-                data_axis: str = "data"):
+                data_axis: str = "data", ladder=None, resume=None):
     """Build a device-resident engine from one declarative ``spec``.
 
     ``tensor`` is a raw COO triple ``(indices, values, dims)`` or a
@@ -179,6 +183,19 @@ def make_engine(tensor, spec: PlanSpec | None = None, *,
     footprint (:func:`repro.engine.stream.resident_bytes`) against
     ``device_budget_bytes`` — tensors that don't fit stream, tensors that
     do stay resident.
+
+    ``ladder`` (``True`` / :class:`repro.resilience.LadderPolicy`)
+    enables the residency rung of the degradation ladder: if placing the
+    *full* layout OOMs on a single device, the factory falls back to the
+    streaming tier (recorded as a ``resilience_degradations`` counter +
+    span — never silent) instead of dying.
+
+    ``resume`` (a :class:`repro.resilience.Snapshot`) is validated
+    against this engine's problem before any state is built: the snapshot
+    must carry one factor per mode with matching row counts, so a resumed
+    ALS loop can never silently continue from a different tensor's
+    factors. (The ALS entry points additionally match the full content
+    fingerprint — this is the structural floor.)
     """
     from repro.core.flycoo import FlycooTensor
     from repro.core.plancache import DEFAULT_CACHE
@@ -189,10 +206,20 @@ def make_engine(tensor, spec: PlanSpec | None = None, *,
 
     spec = (spec or PlanSpec()).canonical()
     config = spec.to_config()
+    policy = resolve_policy(ladder)
     if cache is None:
         cache = DEFAULT_CACHE
     elif cache is False:
         cache = None
+
+    if resume is not None:
+        dims = (tensor.dims if isinstance(tensor, FlycooTensor)
+                else tuple(int(d) for d in tensor[2]))
+        shapes = tuple(int(f.shape[0]) for f in resume.factors)
+        if shapes != tuple(dims):
+            raise ValueError(
+                f"snapshot {resume.path!r} does not match this problem: "
+                f"factor rows {shapes} != dims {tuple(dims)}")
 
     with span("factory.make_engine", backend=spec.backend,
               schedule=spec.schedule, residency=spec.residency,
@@ -224,17 +251,34 @@ def make_engine(tensor, spec: PlanSpec | None = None, *,
             residency = "stream" if (over and mesh is None) else "full"
         sp.set("resolved_residency", residency)
 
-        if residency == "stream":
-            if mesh is not None:
-                raise ValueError(
-                    "residency='stream' is a single-device tier; drop mesh "
-                    "or use residency='full'")
-            return stream_init(tensor, config, start_mode, cache=cache)
+        if residency == "full":
+            cz = _chaos.active()
+            try:
+                if cz is not None:
+                    cz.on_resident_init()
+                state = init(tensor, config, start_mode, cache=cache)
+            except Exception as exc:
+                # residency rung of the degradation ladder: the full
+                # layout doesn't fit -> stream it (single-device only;
+                # bitwise-identical results, see engine.stream)
+                if (policy is None or mesh is not None
+                        or classify(exc) != "oom"):
+                    raise
+                record_degradation("oom", "full", "stream",
+                                   site="factory.residency")
+                sp.set("resolved_residency", "stream")
+                residency = "stream"
+            else:
+                if mesh is None:
+                    return state
+                return shard_state(state, mesh,
+                                   spec.to_dist_config(data_axis))
 
-        state = init(tensor, config, start_mode, cache=cache)
-        if mesh is None:
-            return state
-        return shard_state(state, mesh, spec.to_dist_config(data_axis))
+        if mesh is not None:
+            raise ValueError(
+                "residency='stream' is a single-device tier; drop mesh "
+                "or use residency='full'")
+        return stream_init(tensor, config, start_mode, cache=cache)
 
 
 __all__ = ["PlanSpec", "PlanSpace", "make_engine", "SPACE_DIMS"]

@@ -66,6 +66,12 @@ from repro.obs.metrics import counter as _obs_counter
 from repro.obs.metrics import gauge as _obs_gauge
 from repro.obs.probe import device_peak_bytes
 from repro.obs.trace import span
+from repro.resilience import chaos as _chaos
+from repro.resilience import guard as _guard
+from repro.resilience.ladder import (backoff_delay, classify, next_backend,
+                                     record_degradation, record_retry,
+                                     resolve_policy)
+from repro.resilience.snapshot import as_store, fingerprint
 
 from .api import _JIT_CACHE, DISPATCH_COUNTS, TRACE_COUNTS, _as_flycoo
 from .backends import get_backend
@@ -262,6 +268,7 @@ class StreamStats:
     modes_streamed: int = 0
     uploads: int = 0
     overlapped_uploads: int = 0   # uploads issued ahead of their compute
+    upload_retries: int = 0       # transient-failure upload re-attempts
     peak_ring_bytes: int = 0      # max live device bytes of the chunk ring
     peak_ring_chunks: int = 0
 
@@ -282,6 +289,7 @@ class StreamStats:
             "transfer_bytes": self.transfer_bytes,
             "chunks_streamed": self.chunks_streamed,
             "modes_streamed": self.modes_streamed,
+            "upload_retries": self.upload_retries,
             "peak_ring_bytes": self.peak_ring_bytes,
             "peak_ring_chunks": self.peak_ring_chunks,
             "overlap_efficiency": self.overlap_efficiency,
@@ -299,6 +307,8 @@ def _mirror_stats(stats: StreamStats, before: StreamStats) -> None:
     counts.inc("uploads", stats.uploads - before.uploads)
     counts.inc("overlapped_uploads",
                stats.overlapped_uploads - before.overlapped_uploads)
+    counts.inc("upload_retries",
+               stats.upload_retries - before.upload_retries)
     counts.inc("chunks", stats.chunks_streamed - before.chunks_streamed)
     counts.inc("modes", 1)
     nbytes = _obs_counter("stream_bytes",
@@ -469,13 +479,95 @@ def _mode_tables(state: StreamState, d: int):
 # --------------------------------------------------------------------------
 # stream_mttkrp: one mode, chunk ring + host-side remap reassembly.
 # --------------------------------------------------------------------------
+def _upload(host: dict, mode: int, chunk: int, policy,
+            stats: StreamStats) -> dict:
+    """Place one chunk's host arrays on device, with bounded
+    retry-with-backoff (seeded jitter) on *transient* transfer failures
+    when a ladder policy is active. Non-transient failures (OOM, compile)
+    propagate to the mode-level ladder."""
+    attempt = 0
+    while True:
+        try:
+            cz = _chaos.active()
+            if cz is not None:
+                cz.on_upload(mode, chunk, attempt)
+            return {key: jax.device_put(a) for key, a in host.items()}
+        except Exception as exc:
+            if (policy is None or classify(exc) != "transient"
+                    or attempt >= policy.max_retries):
+                raise
+            stats.upload_retries += 1
+            record_retry("stream.upload", attempt,
+                         backoff_delay(policy, attempt,
+                                       token=("upload", mode, chunk)),
+                         mode=mode, chunk=chunk)
+            attempt += 1
+
+
+def _with_config(state: StreamState,
+                 config: ExecutionConfig) -> StreamState:
+    """Rebuild the chunk plan under a degraded config. Safe mid-rotation:
+    a failed mode attempt mutates neither the host layout nor the factors
+    (the accumulator and next-mode fragments it built are local), and the
+    chunk plan is derived purely from ``tensor`` + ``config``."""
+    return state.replace(config=config,
+                         plan=plan_stream(state.tensor, config))
+
+
 def stream_mttkrp(state: StreamState, factors: Sequence[jax.Array],
-                  mode: int | None = None):
+                  mode: int | None = None, *, policy=None):
     """MTTKRP for the resident mode, streamed chunk-by-chunk; returns
     ``(out, next_state)`` with ``out (dims[mode], R)`` bitwise-identical
     to the resident ``engine.mttkrp``. The next-mode host layout (the
     Alg. 3 remap) is reassembled fragment-by-fragment while the device
-    computes."""
+    computes.
+
+    With a ``policy`` (:class:`repro.resilience.LadderPolicy`) the mode
+    rides the degradation ladder: an OOM halves the chunk budget and
+    replans (up to ``max_budget_halvings`` — per-chunk results are
+    partition-aligned, so any chunking concatenates bitwise-identically);
+    a compile/lowering failure steps the backend down
+    ``BACKEND_LADDER`` and replans (dedup tables follow the backend).
+    The degraded config rides the returned state — later modes inherit
+    it. Every transition is a ``resilience_degradations`` counter + span.
+    """
+    halvings = steps = 0
+    while True:
+        try:
+            return _stream_mode_once(state, factors, mode, policy)
+        except Exception as exc:
+            if policy is None:
+                raise
+            kind = classify(exc)
+            if kind == "oom" and halvings < policy.max_budget_halvings:
+                cur = state.plan.target_slots
+                new = max(state.config.block_p, cur // 2)
+                if new >= cur:
+                    raise
+                halvings += 1
+                record_degradation("oom", cur, new,
+                                   site="stream.chunk_budget",
+                                   mode=state.mode)
+                state = _with_config(
+                    state,
+                    dataclasses.replace(state.config, chunk_nnz=new))
+                continue
+            if kind == "compile" and steps < policy.max_backend_steps:
+                nb = next_backend(state.config.backend)
+                if nb is None:
+                    raise
+                steps += 1
+                record_degradation("compile", state.config.backend, nb,
+                                   site="stream.backend", mode=state.mode)
+                state = _with_config(
+                    state,
+                    dataclasses.replace(state.config, backend=nb))
+                continue
+            raise
+
+
+def _stream_mode_once(state: StreamState, factors: Sequence[jax.Array],
+                      mode: int | None, policy):
     if mode is not None and mode != state.mode:
         raise ValueError(
             f"state holds the mode-{state.mode} layout; cannot compute "
@@ -505,6 +597,9 @@ def stream_mttkrp(state: StreamState, factors: Sequence[jax.Array],
     nidx = np.zeros((snxt, n), dtype=np.int32)
     nalpha = np.full((snxt, n), -1, dtype=np.int32)
 
+    cz = _chaos.active()
+    if cz is not None:
+        cz.on_dispatch(config.backend)
     before = dataclasses.replace(stats)
     ring: dict[int, dict] = {}
     chunk_bytes = 0
@@ -517,8 +612,7 @@ def stream_mttkrp(state: StreamState, factors: Sequence[jax.Array],
                     with span("stream.upload", chunk=k,
                               prefetch=k > c) as up:
                         host = _chunk_host_arrays(state, d, k, tables)
-                        ring[k] = {key: jax.device_put(a)
-                                   for key, a in host.items()}
+                        ring[k] = _upload(host, d, k, policy, stats)
                         nbytes = sum(a.nbytes for a in host.values())
                         up.set("bytes", nbytes)
                     if not chunk_bytes:
@@ -530,6 +624,8 @@ def stream_mttkrp(state: StreamState, factors: Sequence[jax.Array],
             stats.peak_ring_chunks = max(stats.peak_ring_chunks, len(ring))
             stats.peak_ring_bytes = max(stats.peak_ring_bytes,
                                         len(ring) * chunk_bytes)
+            if cz is not None:
+                cz.on_chunk_compute(d, c)
             dev = ring.pop(c)
             DISPATCH_COUNTS["stream_ec"] += 1
             with span("stream.compute", chunk=c):
@@ -563,7 +659,7 @@ def stream_mttkrp(state: StreamState, factors: Sequence[jax.Array],
 
 
 def stream_all_modes(state: StreamState, factors: Sequence[jax.Array], *,
-                     fold=None, carry=None):
+                     fold=None, carry=None, policy=None):
     """spMTTKRP along all N modes, streamed (one host loop — the chunk
     residency *is* the host loop, unlike the resident engine's scan).
 
@@ -571,13 +667,15 @@ def stream_all_modes(state: StreamState, factors: Sequence[jax.Array], *,
     any start mode; without ``fold`` returns ``(outs, next_state)``, with
     ``fold`` returns ``(outs, next_state, factors, carry)`` — the hook
     runs right after each mode's output (Gauss-Seidel ALS order), on the
-    device-resident factors."""
+    device-resident factors. ``policy`` enables the per-mode degradation
+    ladder (see :func:`stream_mttkrp`); a degraded config sticks for the
+    rest of the rotation via the returned state."""
     n = state.nmodes
     factors = tuple(factors)
     outs: list = [None] * n
     for _ in range(n):
         d = state.mode
-        out, state = stream_mttkrp(state, factors)
+        out, state = stream_mttkrp(state, factors, policy=policy)
         if fold is not None:
             factors, carry = fold(d, out, factors, carry)
         outs[d] = out
@@ -592,15 +690,34 @@ def stream_all_modes(state: StreamState, factors: Sequence[jax.Array], *,
 def cp_als_stream(tensor, rank: int, iters: int = 10, key=None,
                   config: ExecutionConfig | None = None,
                   track_fit: bool = True, *, cache=None,
-                  start_mode: int = 0):
+                  start_mode: int = 0, ladder=None, checkpoint=None,
+                  checkpoint_every: int = 1, resume: bool = False):
     """CPD-ALS with the streamed engine — same sweep semantics as
     ``core.cpd.cp_als`` (Gauss-Seidel fold after each mode, fit via the
     sparse-CPD identity), for tensors whose FLYCOO layout exceeds device
-    memory. Factor matrices stay device-resident; element data streams."""
+    memory. Factor matrices stay device-resident; element data streams.
+
+    Resilience (mirrors ``cp_als``):
+
+    * ``ladder``: ``True`` / a :class:`repro.resilience.LadderPolicy`
+      enables the degradation ladder (backend rungs, chunk-budget halving
+      on OOM, upload retry-with-backoff) plus the per-sweep NaN guard
+      with rollback + ridge-recovery replay.
+    * ``checkpoint``: a directory or :class:`repro.resilience.
+      SnapshotStore`; every ``checkpoint_every`` completed sweeps the
+      ``(factors, lam, fits)`` state is snapshotted atomically under the
+      problem fingerprint. ``resume=True`` restores the newest intact
+      snapshot *for the same problem* and replays only the remaining
+      sweeps — bitwise-identical final factors vs an uninterrupted run
+      (at a sweep boundary the layout has rotated back to its start
+      arrangement, so factors + lam are the complete dynamic state).
+    """
     # lazy: core.cpd imports repro.engine at module scope
-    from repro.core.cpd import CPDResult, _als_fold, _fit, init_factors
+    from repro.core.cpd import (CPDResult, _als_fold, _als_fold_recovery,
+                                _fit, init_factors)
 
     config = config or ExecutionConfig()
+    policy = resolve_policy(ladder)
     if key is None:
         key = jax.random.PRNGKey(0)
     state = stream_init(tensor, config, start_mode, cache=cache)
@@ -610,17 +727,51 @@ def cp_als_stream(tensor, rank: int, iters: int = 10, key=None,
     norm_x_sq = float(
         np.sum(state.tensor.values.astype(np.float64) ** 2))
 
-    fits = []
-    for i in range(iters):
+    store = as_store(checkpoint)
+    fits: list = []
+    first = 0
+    fp = None
+    if store is not None:
+        fp = fingerprint(state.tensor.indices, state.tensor.values,
+                         state.dims, rank, config=config, key=key,
+                         start_mode=start_mode, extra="stream")
+        if resume:
+            snap = store.latest(fp)
+            if snap is not None:
+                factors = tuple(jnp.asarray(f) for f in snap.factors)
+                lam = jnp.asarray(snap.lam)
+                fits = list(snap.fits)
+                first = snap.sweep
+    for i in range(first, iters):
+        cz = _chaos.active()
+        if cz is not None:
+            cz.maybe_kill(i)
+        prev = (factors, lam)
         with span("cpd.sweep", sweep=i, streamed=True) as sp:
             outs, state, factors, lam = stream_all_modes(
-                state, factors, fold=_als_fold, carry=lam)
+                state, factors, fold=_als_fold, carry=lam, policy=policy)
+            if cz is not None:
+                factors = tuple(cz.mangle_factors(i, factors))
+            if policy is not None and not _guard.all_finite(factors, lam):
+                # roll back and replay the sweep under the stronger ridge:
+                # the layout is bitwise back at its start arrangement, so
+                # the replay sees exactly the pre-sweep problem.
+                _guard.record_recovery("nan_rollback", sweep=i,
+                                       streamed=True)
+                factors, lam = prev
+                outs, state, factors, lam = stream_all_modes(
+                    state, factors, fold=_als_fold_recovery, carry=lam,
+                    policy=policy)
             if track_fit:
                 fit = _fit(norm_x_sq, outs[n - 1], factors, lam)
                 fits.append(fit)
                 sp.set("fit", float(fit))
                 _obs_gauge("cpd_fit", "latest ALS fit per tier").set(
                     "streamed", float(fit))
+        if store is not None and ((i + 1) % checkpoint_every == 0
+                                  or i + 1 == iters):
+            store.save(fp, i + 1, [np.asarray(f) for f in factors],
+                       np.asarray(lam), fits)
     return CPDResult(factors=list(factors), lam=lam, fits=fits)
 
 

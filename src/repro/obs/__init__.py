@@ -27,8 +27,9 @@ from .export import (chrome_trace, run_manifest, validate_chrome_trace,
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry, REGISTRY,
                       counter, gauge, histogram)
 from .probe import device_peak_bytes, memory_probe
-from .report import (render_report, stream_overlap_from_chrome,
-                     stream_overlap_from_spans, time_tree)
+from .report import (render_report, resilience_report,
+                     stream_overlap_from_chrome, stream_overlap_from_spans,
+                     time_tree)
 from .trace import (ENV_VAR, NULL_SPAN, SpanRecord, Tracer, disable, enable,
                     get_tracer, is_enabled, span, traced)
 
@@ -43,8 +44,8 @@ __all__ = [
     "chrome_trace", "write_chrome_trace", "write_jsonl", "run_manifest",
     "validate_chrome_trace",
     # report
-    "render_report", "time_tree", "stream_overlap_from_spans",
-    "stream_overlap_from_chrome",
+    "render_report", "resilience_report", "time_tree",
+    "stream_overlap_from_spans", "stream_overlap_from_chrome",
     # probe
     "memory_probe", "device_peak_bytes",
 ]

@@ -22,7 +22,7 @@ from .metrics import REGISTRY, MetricsRegistry
 from .trace import Tracer, get_tracer
 
 __all__ = ["time_tree", "render_report", "stream_overlap_from_spans",
-           "stream_overlap_from_chrome"]
+           "stream_overlap_from_chrome", "resilience_report"]
 
 
 # --------------------------------------------------------------------------
@@ -155,6 +155,63 @@ def stream_overlap_from_chrome(trace: dict) -> float | None:
         events.append((e.get("name"), args.get("parent_id"), e.get("ts"),
                        args.get("chunk")))
     return _overlap_from_events(events)
+
+
+# --------------------------------------------------------------------------
+# Resilience pairing: every injected fault must leave an answering event.
+# --------------------------------------------------------------------------
+def resilience_report(registry: MetricsRegistry | None = None) -> dict:
+    """Pair each ``chaos_injections`` site with the resilience event that
+    should have answered it — the machine-checkable form of the *no
+    silent degradation* invariant (the CI ``chaos-smoke`` gate asserts
+    ``unanswered == []``).
+
+    The pairing table (see :mod:`repro.resilience.chaos` for the fault
+    model): ``upload_fail`` -> an upload retry; ``oom_chunk`` -> a
+    chunk-budget degradation; ``oom_resident`` -> the ``full->stream``
+    residency rung; ``compile_fail`` -> a backend rung; ``nan_burst`` ->
+    a NaN rollback recovery; ``corrupt_blob`` -> a quarantined
+    plan-cache blob; ``kill_sweep`` -> a snapshot load (only observable
+    in the *resumed* process — the injection itself dies with the killed
+    one).
+    """
+    registry = registry or REGISTRY
+    metrics = {m["name"]: m.get("values", {}) for m in registry.collect()}
+    degr = metrics.get("resilience_degradations", {})
+    retries = metrics.get("resilience_retries", {})
+    recov = metrics.get("resilience_recoveries", {})
+    cache = metrics.get("plan_cache_outcomes", {})
+    snap = metrics.get("snapshot_events", {})
+    injections = dict(metrics.get("chaos_injections", {}))
+
+    def answered(site: str) -> bool:
+        if site == "upload_fail":
+            return retries.get("stream.upload", 0) > 0
+        if site == "oom_chunk":
+            return any(k.startswith("oom:") and k != "oom:full->stream"
+                       for k in degr)
+        if site == "oom_resident":
+            return degr.get("oom:full->stream", 0) > 0
+        if site == "compile_fail":
+            return any(k.startswith("compile:") for k in degr)
+        if site == "nan_burst":
+            return recov.get("nan_rollback", 0) > 0
+        if site == "corrupt_blob":
+            return cache.get("disk_corrupt", 0) > 0
+        if site == "kill_sweep":
+            return snap.get("load", 0) > 0
+        return False
+
+    return {
+        "injections": injections,
+        "answered": sorted(s for s in injections if answered(s)),
+        "unanswered": sorted(s for s in injections if not answered(s)),
+        "degradations": dict(degr),
+        "retries": dict(retries),
+        "recoveries": dict(recov),
+        "snapshot_events": dict(snap),
+        "cache_quarantines": cache.get("disk_corrupt", 0),
+    }
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,67 @@
+"""repro.resilience — fault injection, checkpoint/resume, degradation
+ladder, numerical guardrails.
+
+The scaling tiers (streamed chunk ring, distributed exchange, plan
+cache) assume hour-long runs on preemptible hardware; this package is
+what lets those runs *finish*:
+
+:mod:`~repro.resilience.snapshot`
+    Atomic, content-addressed sweep snapshots. ``cp_als`` /
+    ``cp_als_stream`` write one per ``checkpoint_every`` sweeps (tmp +
+    ``os.replace``, payload digest in the filename); ``resume=True``
+    loads the newest intact snapshot *for the same problem fingerprint*
+    and replays the remaining sweeps — bitwise-identical final factors
+    vs an uninterrupted run, because at a sweep boundary ``(factors,
+    lam)`` are the complete dynamic state (the layout has rotated back
+    to its start arrangement).
+
+:mod:`~repro.resilience.ladder`
+    Policy-driven retry/fallback chain: compile/lowering failures step
+    the backend down ``pallas_fused -> pallas -> xla -> ref``; OOM steps
+    residency ``full -> stream`` or halves the streamed chunk budget and
+    replans; transient upload failures retry with bounded exponential
+    backoff and seeded jitter. Every transition is a
+    ``resilience_degradations``/``resilience_retries`` counter + span —
+    degradations are observable, never silent.
+
+:mod:`~repro.resilience.chaos`
+    Deterministic seeded fault injectors (upload failure, OOM at chunk
+    k, resident-placement OOM, compile failure per backend, NaN burst,
+    SIGKILL at sweep k, torn cache blob) threaded through the
+    stream/factory/plancache/dispatch hooks. ``REPRO_CHAOS=...``
+    installs a spec from the environment (subprocess / CI scenarios);
+    every fired fault ticks ``chaos_injections`` so
+    :func:`repro.obs.report.resilience_report` can pair faults with the
+    resilience events that answered them.
+
+:mod:`~repro.resilience.guard`
+    Per-sweep NaN/Inf detection; on a burst the sweep is rolled back and
+    replayed under a stronger ridge (``cp_als``'s recovery fold).
+
+The :class:`~repro.core.plancache.PlanCache` disk tier uses the same
+digest (:func:`snapshot.payload_digest`) to checksum-verify every blob
+load, quarantining corrupt files (``*.corrupt``) and rebuilding cold —
+counted as ``disk_corrupt`` in ``PlanCache.stats()``.
+"""
+from . import chaos
+from .chaos import (Chaos, ChaosCompileError, ChaosError, ChaosOOM,
+                    ChaosSpec, ChaosUploadError, active, from_env, install,
+                    uninstall)
+from .snapshot import (Snapshot, SnapshotStore, as_store, fingerprint,
+                       payload_digest)
+from .ladder import (DEFAULT_POLICY, LadderPolicy, backoff_delay, classify,
+                     next_backend, record_degradation, record_retry,
+                     resolve_policy)
+from .guard import all_finite, record_recovery
+
+__all__ = [
+    "chaos", "Chaos", "ChaosSpec", "ChaosError", "ChaosUploadError",
+    "ChaosOOM", "ChaosCompileError", "install", "uninstall", "active",
+    "from_env",
+    "Snapshot", "SnapshotStore", "as_store", "fingerprint",
+    "payload_digest",
+    "LadderPolicy", "DEFAULT_POLICY", "classify", "next_backend",
+    "backoff_delay", "record_degradation", "record_retry",
+    "resolve_policy",
+    "all_finite", "record_recovery",
+]

@@ -1,0 +1,274 @@
+"""Deterministic fault injection (``resilience.chaos``).
+
+Long-running decompositions die in boring, reproducible ways: a host→
+device upload fails transiently, the device OOMs on chunk ``k``, a cached
+plan blob is torn mid-write, a factor matrix picks up a NaN burst, the
+whole process is SIGKILLed between sweeps. This module injects exactly
+those faults, *deterministically*, through hooks the production paths
+already call — so the degradation ladder, the checkpoint/resume path and
+the cache guardrails are exercised by tests and the CI ``chaos-smoke``
+job instead of being dead code until the first real outage.
+
+Design rules:
+
+* **Seeded and ordinal-addressed.** Every injector fires at a fixed
+  ordinal of its site (``upload_fail=2`` fails the third distinct chunk
+  upload) a fixed number of times, then never again — retries and
+  fallbacks therefore *succeed* deterministically, which is what lets
+  chaos runs gate bitwise parity against clean runs.
+* **Observable.** Every fired injection increments the
+  ``chaos_injections`` counter (by site), so the ``no silent
+  degradation`` gate can pair each fault with the resilience event that
+  answered it (:func:`repro.obs.report.resilience_report`).
+* **Off by default, env-installable.** Production code pays one
+  ``is None`` test per hook site (the ``repro.obs.trace`` pattern).
+  ``REPRO_CHAOS="upload_fail=1,oom_chunk=3,seed=7"`` installs a spec at
+  import time for subprocess/CI scenarios.
+
+Fault model (``ChaosSpec`` fields):
+
+  ``upload_fail``    fail the Nth distinct chunk upload (0-based) for
+                     ``upload_fail_times`` consecutive attempts
+                     (transient — answered by retry-with-backoff)
+  ``oom_chunk``      raise :class:`ChaosOOM` on the Nth chunk compute,
+                     once (answered by chunk-budget halving + replan)
+  ``oom_resident``   raise :class:`ChaosOOM` once while placing the
+                     full-residency layout (answered by the
+                     ``residency full -> stream`` ladder rung)
+  ``compile_fail``   backends whose every dispatch raises
+                     :class:`ChaosCompileError` (answered by the
+                     backend ladder ``pallas_fused -> pallas -> xla ->
+                     ref``)
+  ``nan_sweep``      overwrite one factor entry with NaN after sweep N
+                     (answered by rollback + ridge-recovery re-sweep)
+  ``kill_sweep``     SIGKILL the process at the *start* of sweep N
+                     (answered by checkpoint/resume)
+  ``corrupt_blob``   truncate the next ``PlanCache`` disk blob after it
+                     lands (answered by checksum quarantine + rebuild)
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+
+from repro.obs.metrics import counter as _counter
+from repro.obs.trace import span as _span
+
+__all__ = ["ChaosError", "ChaosUploadError", "ChaosOOM",
+           "ChaosCompileError", "ChaosSpec", "Chaos", "install",
+           "uninstall", "active", "from_env", "ENV_VAR"]
+
+ENV_VAR = "REPRO_CHAOS"
+
+
+class ChaosError(RuntimeError):
+    """Base class for injected faults."""
+
+
+class ChaosUploadError(ChaosError):
+    """Injected transient host->device transfer failure."""
+
+
+class ChaosOOM(ChaosError):
+    """Injected device allocation failure (classified as OOM)."""
+
+
+class ChaosCompileError(ChaosError):
+    """Injected kernel compile/lowering failure."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosSpec:
+    """Declarative, seeded fault plan (see module docstring)."""
+
+    seed: int = 0
+    upload_fail: int | None = None
+    upload_fail_times: int = 1
+    oom_chunk: int | None = None
+    oom_resident: bool = False
+    compile_fail: tuple = ()
+    nan_sweep: int | None = None
+    kill_sweep: int | None = None
+    corrupt_blob: bool = False
+
+    def __post_init__(self):
+        if self.upload_fail_times < 1:
+            raise ValueError("upload_fail_times must be >= 1")
+
+
+class Chaos:
+    """Live injector: a :class:`ChaosSpec` plus the ordinal counters that
+    make every fault fire at exactly one deterministic point."""
+
+    def __init__(self, spec: ChaosSpec):
+        self.spec = spec
+        self._upload_ordinal: dict = {}      # (mode, chunk) -> ordinal
+        self._upload_attempts: dict = {}     # (mode, chunk) -> failed tries
+        self._compute_calls = 0
+        self._fired: set[str] = set()
+
+    # ------------------------------------------------------------- recording
+    def _record(self, site: str, **attrs) -> None:
+        _counter("chaos_injections",
+                 "injected faults by site (resilience.chaos)").inc(site)
+        with _span("chaos.inject", site=site, **attrs):
+            pass
+
+    def fired(self, site: str) -> bool:
+        return site in self._fired
+
+    # ----------------------------------------------------------- hook sites
+    def on_upload(self, mode: int, chunk: int, attempt: int) -> None:
+        """Called per upload attempt; raises ChaosUploadError while the
+        targeted distinct upload has failures left."""
+        fail_at = self.spec.upload_fail
+        if fail_at is None:
+            return
+        key = (mode, chunk)
+        ordinal = self._upload_ordinal.setdefault(
+            key, len(self._upload_ordinal))
+        if ordinal != fail_at:
+            return
+        tries = self._upload_attempts.get(key, 0)
+        if tries >= self.spec.upload_fail_times:
+            return
+        self._upload_attempts[key] = tries + 1
+        self._fired.add("upload_fail")
+        self._record("upload_fail", mode=mode, chunk=chunk, attempt=attempt)
+        raise ChaosUploadError(
+            f"injected upload failure (mode {mode}, chunk {chunk}, "
+            f"attempt {attempt})")
+
+    def on_chunk_compute(self, mode: int, chunk: int) -> None:
+        """Called before each streamed chunk compute; raises ChaosOOM once
+        at the configured call ordinal."""
+        at = self.spec.oom_chunk
+        ordinal = self._compute_calls
+        self._compute_calls += 1
+        if at is None or "oom_chunk" in self._fired or ordinal != at:
+            return
+        self._fired.add("oom_chunk")
+        self._record("oom_chunk", mode=mode, chunk=chunk)
+        raise ChaosOOM(
+            f"injected RESOURCE_EXHAUSTED at chunk compute {ordinal} "
+            f"(mode {mode}, chunk {chunk})")
+
+    def on_resident_init(self) -> None:
+        """Called before the full-residency device placement; raises
+        ChaosOOM once when ``oom_resident`` is set."""
+        if not self.spec.oom_resident or "oom_resident" in self._fired:
+            return
+        self._fired.add("oom_resident")
+        self._record("oom_resident")
+        raise ChaosOOM("injected RESOURCE_EXHAUSTED placing resident layout")
+
+    def on_dispatch(self, backend: str) -> None:
+        """Called before jitted dispatch; every dispatch of a backend in
+        ``compile_fail`` raises (deterministic ladder ordering)."""
+        if backend in self.spec.compile_fail:
+            self._fired.add("compile_fail")
+            self._record("compile_fail", backend=backend)
+            raise ChaosCompileError(
+                f"injected Mosaic lowering failure for backend "
+                f"{backend!r}")
+
+    def mangle_factors(self, sweep: int, factors):
+        """Called after each ALS sweep; injects one NaN into factor 0 at
+        the configured sweep (once). Returns the (possibly mangled)
+        factors."""
+        if self.spec.nan_sweep is None or sweep != self.spec.nan_sweep \
+                or "nan_burst" in self._fired:
+            return factors
+        self._fired.add("nan_burst")
+        self._record("nan_burst", sweep=sweep)
+        import jax.numpy as jnp
+
+        factors = list(factors)
+        factors[0] = factors[0].at[0, 0].set(jnp.nan)
+        return tuple(factors)
+
+    def maybe_kill(self, sweep: int) -> None:
+        """Called at the start of each ALS sweep; SIGKILLs the process at
+        the configured sweep — the preemption scenario."""
+        if self.spec.kill_sweep is None or sweep != self.spec.kill_sweep:
+            return
+        self._record("kill_sweep", sweep=sweep)
+        os.kill(os.getpid(), signal.SIGKILL)
+
+    def on_disk_save(self, path: str) -> None:
+        """Called after a ``PlanCache`` blob lands on disk; truncates it
+        once to simulate a torn write when ``corrupt_blob`` is set."""
+        if not self.spec.corrupt_blob or "corrupt_blob" in self._fired:
+            return
+        self._fired.add("corrupt_blob")
+        self._record("corrupt_blob", path=os.path.basename(path))
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.truncate(max(size // 2, 1))
+
+
+# --------------------------------------------------------------------------
+# Global installer + env opt-in (the repro.obs.trace pattern).
+# --------------------------------------------------------------------------
+_ACTIVE: Chaos | None = None
+
+
+def install(spec: ChaosSpec | Chaos) -> Chaos:
+    """Install ``spec`` as the process-global injector; returns it."""
+    global _ACTIVE
+    _ACTIVE = spec if isinstance(spec, Chaos) else Chaos(spec)
+    return _ACTIVE
+
+
+def uninstall() -> Chaos | None:
+    """Remove the global injector (hooks become no-ops); returns it."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, None
+    return prev
+
+
+def active() -> Chaos | None:
+    """The global injector, or ``None`` while chaos is off (the hook
+    fast path: one global load + one ``is None`` test)."""
+    return _ACTIVE
+
+
+def from_env(value: str) -> ChaosSpec:
+    """Parse a ``REPRO_CHAOS`` spec string.
+
+    Comma-separated ``key=value`` items mirroring :class:`ChaosSpec`
+    fields; ``compile_fail`` takes ``|``-separated backend names; bare
+    flags (``corrupt_blob``/``oom_resident``) mean ``True``::
+
+        REPRO_CHAOS="upload_fail=1,oom_chunk=3,kill_sweep=2,seed=7"
+        REPRO_CHAOS="compile_fail=pallas_fused|pallas,corrupt_blob"
+    """
+    kwargs: dict = {}
+    for item in value.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        key, _, raw = item.partition("=")
+        key = key.strip()
+        raw = raw.strip()
+        if key in ("corrupt_blob", "oom_resident"):
+            kwargs[key] = raw.lower() not in ("0", "false") if raw else True
+        elif key == "compile_fail":
+            kwargs[key] = tuple(b for b in raw.split("|") if b)
+        elif key in ("seed", "upload_fail", "upload_fail_times",
+                     "oom_chunk", "nan_sweep", "kill_sweep"):
+            kwargs[key] = int(raw)
+        else:
+            raise ValueError(f"unknown {ENV_VAR} key {key!r}")
+    return ChaosSpec(**kwargs)
+
+
+def _init_from_env() -> None:
+    value = os.environ.get(ENV_VAR, "").strip()
+    if not value or value.lower() in ("0", "false", "off"):
+        return
+    install(from_env(value))
+
+
+_init_from_env()

@@ -1,0 +1,40 @@
+"""Numerical guardrails for ALS sweeps: NaN/Inf detection + recovery
+bookkeeping.
+
+A single NaN produced mid-sweep (overflow in a gram product, a poisoned
+input value, a flaky accumulator) silently corrupts every later factor
+update — the run completes and the factors are garbage. ``cp_als`` /
+``cp_als_stream`` therefore check factor finiteness after every sweep
+(one host sync, same cost class as the per-sweep fit sync) and, on a
+burst, roll back to the previous sweep's factors and replay the sweep
+under a stronger ridge regularizer (``core.cpd._als_fold_recovery``).
+This module owns the check and the observability around the recovery.
+"""
+from __future__ import annotations
+
+from repro.obs.metrics import counter as _counter
+from repro.obs.trace import span as _span
+
+__all__ = ["all_finite", "record_recovery"]
+
+
+def all_finite(factors, lam=None) -> bool:
+    """Host-synced finiteness check over a factor tuple (+ lambda)."""
+    import jax.numpy as jnp
+
+    for f in factors:
+        if not bool(jnp.all(jnp.isfinite(f))):
+            return False
+    if lam is not None and not bool(jnp.all(jnp.isfinite(lam))):
+        return False
+    return True
+
+
+def record_recovery(what: str, **attrs) -> None:
+    """Record one numerical recovery (e.g. ``nan_rollback``) as a
+    ``resilience_recoveries`` counter label + ``resilience.recover``
+    span."""
+    _counter("resilience_recoveries",
+             "numerical recoveries by kind").inc(what)
+    with _span("resilience.recover", what=what, **attrs):
+        pass

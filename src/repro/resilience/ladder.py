@@ -1,0 +1,177 @@
+"""Policy-driven degradation ladder: classify failures, step down, retry.
+
+The production stance is *degrade, never die silently*: a Mosaic compile
+or lowering failure steps the backend down the fixed ladder
+``pallas_fused -> pallas -> xla -> ref`` (``engine.config.BACKEND_LADDER``
+— each rung strictly more portable, bitwise-identical output); a device
+OOM steps residency ``full -> stream`` (``engine.factory.make_engine``)
+or halves the streamed chunk budget and replans
+(``engine.stream.stream_mttkrp``); a transient transfer failure retries
+with bounded exponential backoff and *deterministic seeded jitter*, so
+chaos runs replay identically. Every transition is recorded as a
+``resilience_degradations`` counter label plus a ``resilience.degrade``
+span — a fallback that leaves no metric is a bug the CI ``chaos-smoke``
+job catches.
+
+This module owns the shared pieces (classification, policy, backoff,
+recording); the *application* sites live where the failures happen —
+``core.cpd.cp_als`` (backend rungs per sweep), ``engine.stream``
+(chunk-budget rungs + upload retries), ``engine.factory`` (residency
+rung).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+
+from repro.obs.metrics import counter as _counter
+from repro.obs.trace import span as _span
+
+from .chaos import ChaosCompileError, ChaosOOM, ChaosUploadError
+
+__all__ = ["LadderPolicy", "DEFAULT_POLICY", "classify", "next_backend",
+           "backoff_delay", "record_degradation", "record_retry",
+           "resolve_policy"]
+
+# Substrings identifying real JAX/XLA failure flavors without importing
+# backend-specific exception types (which vary across jax versions).
+_OOM_MARKERS = ("resource_exhausted", "out of memory", "oom")
+_COMPILE_MARKERS = ("mosaic", "lowering", "unsupported", "unimplemented",
+                    "compilation failure", "failed to compile",
+                    "triton")
+_TRANSIENT_MARKERS = ("unavailable", "deadline_exceeded",
+                      "connection reset", "transfer failed")
+
+
+@dataclasses.dataclass(frozen=True)
+class LadderPolicy:
+    """Knobs of the retry/fallback chain (frozen — safely shareable).
+
+    Attributes:
+      max_retries: attempts beyond the first for *transient* failures
+        (upload retry-with-backoff).
+      backoff_base_s / backoff_cap_s: bounded exponential backoff —
+        attempt ``a`` sleeps ``min(base * 2**a, cap)`` scaled by jitter.
+      jitter: fraction of the delay randomized (0 = none, 0.5 = delay in
+        ``[0.5x, 1.0x]``); drawn from a *seeded* hash of (seed, token,
+        attempt), so replays are deterministic.
+      seed: jitter seed.
+      max_budget_halvings: how many times the streamed chunk budget may
+        halve on OOM before the failure is surfaced.
+      max_backend_steps: how many backend rungs may be descended before
+        the failure is surfaced (the full ladder by default).
+    """
+
+    max_retries: int = 3
+    backoff_base_s: float = 0.005
+    backoff_cap_s: float = 0.25
+    jitter: float = 0.5
+    seed: int = 0
+    max_budget_halvings: int = 4
+    max_backend_steps: int = 3
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if not 0.0 <= self.jitter <= 1.0:
+            raise ValueError("jitter must be in [0, 1]")
+        if self.backoff_base_s < 0 or self.backoff_cap_s < 0:
+            raise ValueError("backoff times must be >= 0")
+
+
+DEFAULT_POLICY = LadderPolicy()
+
+
+def resolve_policy(ladder) -> LadderPolicy | None:
+    """Normalize a user-facing ``ladder=`` argument: ``None``/``False``
+    -> off, ``True`` -> :data:`DEFAULT_POLICY`, a policy -> itself."""
+    if ladder is None or ladder is False:
+        return None
+    if ladder is True:
+        return DEFAULT_POLICY
+    if isinstance(ladder, LadderPolicy):
+        return ladder
+    raise TypeError(f"ladder must be bool/None/LadderPolicy, "
+                    f"got {type(ladder).__name__}")
+
+
+def classify(exc: BaseException) -> str:
+    """Failure taxonomy: ``"oom" | "compile" | "transient" | "fatal"``.
+
+    Chaos-injected faults classify by type; real JAX/XLA failures by
+    well-known message markers (jax wraps most of them in
+    ``XlaRuntimeError`` whose *status* only lives in the message).
+    Anything unrecognized is ``"fatal"`` — the ladder never swallows a
+    failure it cannot name.
+    """
+    if isinstance(exc, ChaosOOM):
+        return "oom"
+    if isinstance(exc, ChaosCompileError):
+        return "compile"
+    if isinstance(exc, ChaosUploadError):
+        return "transient"
+    if isinstance(exc, MemoryError):
+        return "oom"
+    msg = f"{type(exc).__name__}: {exc}".lower()
+    if any(m in msg for m in _OOM_MARKERS):
+        return "oom"
+    if any(m in msg for m in _COMPILE_MARKERS):
+        return "compile"
+    if any(m in msg for m in _TRANSIENT_MARKERS):
+        return "transient"
+    return "fatal"
+
+
+def next_backend(backend: str) -> str | None:
+    """The next (more portable) rung under ``backend``, or ``None`` at
+    the bottom / for backends outside the ladder."""
+    from repro.engine.config import BACKEND_LADDER
+
+    try:
+        i = BACKEND_LADDER.index(backend)
+    except ValueError:
+        return None
+    if i + 1 >= len(BACKEND_LADDER):
+        return None
+    return BACKEND_LADDER[i + 1]
+
+
+def backoff_delay(policy: LadderPolicy, attempt: int, token="") -> float:
+    """Bounded exponential backoff with deterministic seeded jitter.
+
+    ``token`` names the retried operation (e.g. ``(mode, chunk)``) so two
+    concurrent retriers don't share a jitter stream; the same
+    (seed, token, attempt) always yields the same delay.
+    """
+    base = min(policy.backoff_base_s * (2.0 ** attempt),
+               policy.backoff_cap_s)
+    if policy.jitter <= 0.0:
+        return base
+    h = hashlib.sha256(
+        repr((policy.seed, token, attempt)).encode()).digest()
+    u = int.from_bytes(h[:8], "big") / float(1 << 64)   # [0, 1)
+    return base * (1.0 - policy.jitter * u)
+
+
+def record_degradation(kind: str, frm, to, **attrs) -> None:
+    """Make one ladder transition observable: a
+    ``resilience_degradations`` counter label ``kind:frm->to`` plus a
+    ``resilience.degrade`` span. Never silent."""
+    _counter("resilience_degradations",
+             "degradation-ladder transitions (kind:from->to)").inc(
+                 f"{kind}:{frm}->{to}")
+    with _span("resilience.degrade", kind=kind, frm=str(frm), to=str(to),
+               **attrs):
+        pass
+
+
+def record_retry(what: str, attempt: int, delay_s: float, **attrs) -> None:
+    """Record one transient-failure retry (counter + span), then sleep
+    the backoff delay."""
+    _counter("resilience_retries",
+             "transient-failure retries by site").inc(what)
+    with _span("resilience.retry", what=what, attempt=attempt,
+               delay_s=delay_s, **attrs):
+        if delay_s > 0:
+            time.sleep(delay_s)

@@ -1,0 +1,233 @@
+"""Atomic, content-addressed ALS sweep snapshots (checkpoint/resume).
+
+An hour-long ``cp_als`` / ``cp_als_stream`` / distributed sweep dies on
+the first preemption today, losing every completed sweep. This module
+makes sweep boundaries durable:
+
+* **Fingerprinted.** A snapshot is bound to a :func:`fingerprint` of the
+  exact problem — tensor bytes (indices + values + dims), rank, the
+  ``ExecutionConfig``/``PlanSpec`` repr, the init PRNG key and the start
+  mode. Resume refuses snapshots from a *different* problem, because the
+  whole point is bitwise-identical continuation: at a sweep boundary the
+  engine layout has rotated back to its start-mode arrangement, so
+  ``(factors, lam)`` are the complete dynamic state and replaying the
+  remaining sweeps reproduces an uninterrupted run bit for bit.
+* **Atomic + checksummed.** Writes go to a tmp file in the destination
+  directory and are published with ``os.replace``; the payload digest is
+  part of the *filename*, so a torn or bit-rotten blob is detected on
+  load (recompute + compare), quarantined (renamed ``*.corrupt``), and
+  the loader falls back to the next-older sweep instead of resuming from
+  garbage.
+* **Observable.** Saves/loads/corruptions tick the ``snapshot_events``
+  counter and wrap in ``resilience.snapshot_*`` spans.
+
+Layout: ``<dir>/<fp16>-sweep<NNNNNN>-<digest12>.npz`` — one flat npz per
+snapshot (per-factor arrays + ``lam`` + ``fits`` + a JSON meta string),
+``keep`` newest retained per fingerprint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import re
+from typing import Sequence
+
+import numpy as np
+
+from repro.obs.metrics import counter as _counter
+from repro.obs.trace import span as _span
+
+__all__ = ["fingerprint", "payload_digest", "Snapshot", "SnapshotStore",
+           "as_store"]
+
+_FORMAT_VERSION = 1
+_NAME_RE = re.compile(
+    r"(?P<fp>[0-9a-f]{16})-sweep(?P<sweep>\d{6})-(?P<digest>[0-9a-f]{12})"
+    r"\.npz")
+
+
+def fingerprint(indices, values, dims: Sequence[int], rank: int,
+                config=None, key=None, start_mode: int = 0,
+                extra: str = "") -> str:
+    """Content address of one decomposition problem (sha256 hex).
+
+    Hashes the exact tensor bytes plus every knob that changes the traced
+    computation — two runs share a fingerprint iff an uninterrupted run
+    and a resumed run would produce bitwise-identical factors.
+    """
+    h = hashlib.sha256()
+    h.update(repr((tuple(int(d) for d in dims), int(rank),
+                   int(start_mode), repr(config), extra,
+                   _FORMAT_VERSION)).encode())
+    h.update(np.ascontiguousarray(indices).tobytes())
+    h.update(np.ascontiguousarray(values).tobytes())
+    if key is not None:
+        h.update(np.asarray(key).tobytes())
+    return h.hexdigest()
+
+
+def payload_digest(arrays: dict) -> str:
+    """Order-stable sha256 over a dict of numpy arrays (key order is the
+    caller's contract). Shared by the snapshot store and the
+    ``PlanCache`` disk guardrail so both verify blobs the same way."""
+    h = hashlib.sha256()
+    for name in arrays:
+        a = np.ascontiguousarray(arrays[name])
+        h.update(name.encode())
+        h.update(str(a.dtype).encode())
+        h.update(repr(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def as_store(checkpoint) -> "SnapshotStore | None":
+    """Normalize a user-facing ``checkpoint=`` argument: ``None``/``False``
+    -> off, a directory path -> a fresh :class:`SnapshotStore` over it, a
+    store -> itself."""
+    if checkpoint is None or checkpoint is False:
+        return None
+    if isinstance(checkpoint, SnapshotStore):
+        return checkpoint
+    return SnapshotStore(os.fspath(checkpoint))
+
+
+@dataclasses.dataclass
+class Snapshot:
+    """One loaded sweep snapshot (host numpy; ``sweep`` is the number of
+    *completed* sweeps — resume continues at sweep ``sweep``)."""
+
+    fingerprint: str
+    sweep: int
+    factors: list[np.ndarray]
+    lam: np.ndarray
+    fits: list[float]
+    path: str
+
+
+class SnapshotStore:
+    """Directory of fingerprinted sweep snapshots; see module docstring.
+
+    ``save`` is cheap relative to a sweep (host copy + one npz write) and
+    safe to call every sweep; ``latest`` returns the newest *intact*
+    snapshot for a fingerprint, quarantining any corrupt blob it meets on
+    the way down.
+    """
+
+    def __init__(self, directory: str, keep: int = 3):
+        if keep < 1:
+            raise ValueError("keep must be >= 1")
+        self.dir = os.fspath(directory)
+        self.keep = keep
+        self.saves = 0
+        self.loads = 0
+        self.corrupt = 0
+
+    # ------------------------------------------------------------------ save
+    def save(self, fp: str, sweep: int, factors, lam,
+             fits: Sequence[float] = ()) -> str:
+        """Persist one completed-sweep state; returns the blob path."""
+        with _span("resilience.snapshot_save", sweep=sweep) as sp:
+            arrays = {f"factor{i}": np.asarray(f)
+                      for i, f in enumerate(factors)}
+            arrays["lam"] = np.asarray(lam)
+            arrays["fits"] = np.asarray(list(fits), dtype=np.float64)
+            meta = {"version": _FORMAT_VERSION, "fingerprint": fp,
+                    "sweep": int(sweep), "n_factors": len(factors)}
+            arrays["meta"] = np.frombuffer(
+                json.dumps(meta).encode(), dtype=np.uint8)
+            digest = payload_digest(arrays)
+            os.makedirs(self.dir, exist_ok=True)
+            fn = os.path.join(
+                self.dir, f"{fp[:16]}-sweep{sweep:06d}-{digest[:12]}.npz")
+            tmp = os.path.join(self.dir,
+                               f".tmp-{os.getpid()}-{fp[:16]}-{sweep}")
+            with open(tmp, "wb") as f:
+                np.savez(f, **arrays)
+            os.replace(tmp, fn)
+            sp.set("path", os.path.basename(fn))
+        self.saves += 1
+        _counter("snapshot_events",
+                 "sweep snapshot saves/loads/corruptions").inc("save")
+        self._gc(fp[:16])
+        return fn
+
+    def _gc(self, fp16: str) -> None:
+        blobs = self._blobs(fp16)
+        for _, fn in blobs[:-self.keep]:
+            try:
+                os.remove(os.path.join(self.dir, fn))
+            except OSError:
+                pass
+
+    def _blobs(self, fp16: str | None = None) -> list[tuple[int, str]]:
+        """(sweep, filename) of every snapshot blob, sweep-ascending."""
+        try:
+            names = os.listdir(self.dir)
+        except FileNotFoundError:
+            return []
+        out = []
+        for name in names:
+            m = _NAME_RE.fullmatch(name)
+            if m and (fp16 is None or m.group("fp") == fp16):
+                out.append((int(m.group("sweep")), name))
+        return sorted(out)
+
+    # ------------------------------------------------------------------ load
+    def load(self, path: str) -> Snapshot:
+        """Load + checksum-verify one blob; raises ``ValueError`` on
+        corruption (callers normally go through :meth:`latest`, which
+        quarantines and falls back instead)."""
+        m = _NAME_RE.fullmatch(os.path.basename(path))
+        if m is None:
+            raise ValueError(f"not a snapshot blob: {path}")
+        with _span("resilience.snapshot_load") as sp:
+            with np.load(path) as blob:
+                arrays = {name: blob[name] for name in blob.files}
+            meta = json.loads(bytes(arrays["meta"]).decode())
+            # recompute in save order: factors, lam, fits, meta
+            ordered = {f"factor{i}": arrays[f"factor{i}"]
+                       for i in range(meta["n_factors"])}
+            ordered["lam"] = arrays["lam"]
+            ordered["fits"] = arrays["fits"]
+            ordered["meta"] = arrays["meta"]
+            digest = payload_digest(ordered)
+            if digest[:12] != m.group("digest"):
+                raise ValueError(
+                    f"snapshot payload digest mismatch: {path}")
+            sp.set("sweep", meta["sweep"])
+        self.loads += 1
+        _counter("snapshot_events",
+                 "sweep snapshot saves/loads/corruptions").inc("load")
+        return Snapshot(
+            fingerprint=meta["fingerprint"], sweep=meta["sweep"],
+            factors=[arrays[f"factor{i}"]
+                     for i in range(meta["n_factors"])],
+            lam=arrays["lam"], fits=list(arrays["fits"]), path=path)
+
+    def latest(self, fp: str) -> Snapshot | None:
+        """Newest intact snapshot for ``fp``; corrupt blobs met on the
+        way are quarantined (``*.corrupt``) and skipped."""
+        for _, name in reversed(self._blobs(fp[:16])):
+            path = os.path.join(self.dir, name)
+            try:
+                snap = self.load(path)
+            except Exception:
+                self._quarantine(path)
+                continue
+            if snap.fingerprint != fp:  # 16-hex-char prefix collision
+                continue
+            return snap
+        return None
+
+    def _quarantine(self, path: str) -> None:
+        self.corrupt += 1
+        _counter("snapshot_events",
+                 "sweep snapshot saves/loads/corruptions").inc("corrupt")
+        with _span("resilience.snapshot_quarantine",
+                   path=os.path.basename(path)):
+            try:
+                os.replace(path, path + ".corrupt")
+            except OSError:
+                pass

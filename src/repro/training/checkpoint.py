@@ -1,11 +1,17 @@
-"""Sharded checkpointing: atomic, retained, async, reshard-on-load.
+"""Sharded checkpointing: atomic, checksummed, retained, reshard-on-load.
 
-Layout:  <dir>/step_<N>/  with one ``.npy`` per flattened leaf plus
-``meta.json`` (tree structure, data-pipeline cursor, step). Writes go to
-``step_<N>.tmp`` and are renamed (atomic on POSIX) — a preempted save can
-never corrupt the latest checkpoint. Restore ``device_put``s leaves with
-whatever sharding the *current* mesh prescribes, so restarts may change
-device count (elastic shrink/grow).
+A thin adapter over the :mod:`repro.resilience.snapshot` blob format:
+each step is ONE flat ``.npz`` (flattened leaves + JSON meta with the
+data-pipeline cursor) whose :func:`~repro.resilience.snapshot.
+payload_digest` is part of the *filename* —
+``step_<NNNNNNNN>-<digest12>.npz``. Writes go to a tmp file and are
+published with ``os.replace`` (atomic on POSIX), so a preempted save can
+never corrupt the latest checkpoint; restores recompute the digest, and
+:meth:`CheckpointManager.restore_latest` quarantines a torn or
+bit-rotten blob (renamed ``*.corrupt``) and falls back to the next-older
+step instead of resuming from garbage. Restore ``device_put``s leaves
+with whatever sharding the *current* mesh prescribes, so restarts may
+change device count (elastic shrink/grow).
 """
 from __future__ import annotations
 
@@ -13,15 +19,27 @@ import concurrent.futures
 import json
 import os
 import re
-import shutil
 
 import jax
 import numpy as np
 
+from repro.obs.metrics import counter as _counter
+from repro.obs.trace import span as _span
+from repro.resilience.snapshot import payload_digest
 
-def _flatten(tree):
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    return leaves, treedef
+_NAME_RE = re.compile(r"step_(?P<step>\d{8})-(?P<digest>[0-9a-f]{12})\.npz")
+
+
+def _events():
+    return _counter("checkpoint_events",
+                    "train checkpoint saves/loads/corruptions")
+
+
+def _payload(host_leaves, meta_bytes) -> dict:
+    """Canonical digest/save order: leaves, then meta."""
+    arrays = {f"leaf{i:05d}": a for i, a in enumerate(host_leaves)}
+    arrays["meta"] = meta_bytes
+    return arrays
 
 
 class CheckpointManager:
@@ -38,12 +56,10 @@ class CheckpointManager:
     def save(self, state, data_state: dict | None = None):
         step = int(state["step"])
         # snapshot to host synchronously (cheap vs. train step), write async
-        leaves, treedef = _flatten(state)
+        leaves, _ = jax.tree_util.tree_flatten(state)
         host = [np.asarray(x) for x in leaves]
         meta = {
             "step": step,
-            "treedef": jax.tree_util.tree_structure(state).serialize_using_proto().hex()
-            if hasattr(treedef, "serialize_using_proto") else None,
             "n_leaves": len(host),
             "data_state": data_state or {},
         }
@@ -54,18 +70,18 @@ class CheckpointManager:
             self._write(step, host, meta)
 
     def _write(self, step: int, host_leaves, meta):
-        tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
-        final = os.path.join(self.dir, f"step_{step:08d}")
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp)
-        for i, arr in enumerate(host_leaves):
-            np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
-        with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump(meta, f)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)                     # atomic publish
+        with _span("checkpoint.save", step=step) as sp:
+            arrays = _payload(host_leaves, np.frombuffer(
+                json.dumps(meta).encode(), dtype=np.uint8))
+            digest = payload_digest(arrays)
+            final = os.path.join(
+                self.dir, f"step_{step:08d}-{digest[:12]}.npz")
+            tmp = os.path.join(self.dir, f".tmp-{os.getpid()}-{step}")
+            with open(tmp, "wb") as f:
+                np.savez(f, **arrays)
+            os.replace(tmp, final)                # atomic publish
+            sp.set("path", os.path.basename(final))
+        _events().inc("save")
         self._gc()
 
     def wait(self):
@@ -74,43 +90,82 @@ class CheckpointManager:
             self._pending = None
 
     def _gc(self):
-        steps = self.all_steps()
-        for s in steps[:-self.keep] if self.keep else []:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
-                          ignore_errors=True)
+        blobs = self._blobs()
+        for _, name in blobs[:-self.keep] if self.keep else []:
+            try:
+                os.remove(os.path.join(self.dir, name))
+            except OSError:
+                pass
 
     # --------------------------------------------------------------- restore
-    def all_steps(self) -> list[int]:
+    def _blobs(self) -> list[tuple[int, str]]:
+        """(step, filename) of every checkpoint blob, step-ascending."""
         out = []
         for name in os.listdir(self.dir):
-            m = re.fullmatch(r"step_(\d+)", name)
-            if m and os.path.exists(os.path.join(self.dir, name,
-                                                 "meta.json")):
-                out.append(int(m.group(1)))
+            m = _NAME_RE.fullmatch(name)
+            if m:
+                out.append((int(m.group("step")), name))
         return sorted(out)
 
-    def restore(self, step: int, like=None, shardings=None):
-        """Load a checkpoint. ``like`` (a pytree of the same structure, e.g.
-        from init or eval_shape) provides the treedef; ``shardings`` (same
-        structure, optional) reshards onto the current mesh."""
-        path = os.path.join(self.dir, f"step_{step:08d}")
-        with open(os.path.join(path, "meta.json")) as f:
-            meta = json.load(f)
-        host = [np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
-                for i in range(meta["n_leaves"])]
+    def all_steps(self) -> list[int]:
+        return [s for s, _ in self._blobs()]
+
+    def _load(self, name: str):
+        """Load + checksum-verify one blob; ValueError on corruption."""
+        path = os.path.join(self.dir, name)
+        m = _NAME_RE.fullmatch(name)
+        with np.load(path) as blob:
+            arrays = {k: blob[k] for k in blob.files}
+        meta = json.loads(bytes(arrays["meta"]).decode())
+        host = [arrays[f"leaf{i:05d}"] for i in range(meta["n_leaves"])]
+        digest = payload_digest(_payload(host, arrays["meta"]))
+        if digest[:12] != m.group("digest"):
+            raise ValueError(f"checkpoint payload digest mismatch: {path}")
+        return host, meta
+
+    def _quarantine(self, name: str) -> None:
+        _events().inc("corrupt")
+        with _span("checkpoint.quarantine", path=name):
+            try:
+                os.replace(os.path.join(self.dir, name),
+                           os.path.join(self.dir, name + ".corrupt"))
+            except OSError:
+                pass
+
+    def _unflatten(self, host, meta, like, shardings):
         if like is None:
             raise ValueError("restore requires `like` pytree for structure")
-        _, treedef = _flatten(like)
+        _, treedef = jax.tree_util.tree_flatten(like)
         state = jax.tree_util.tree_unflatten(treedef, host)
         if shardings is not None:
             state = jax.tree.map(
                 lambda x, s: jax.device_put(x, s), state, shardings)
+        _events().inc("load")
         return state, meta["data_state"]
 
+    def restore(self, step: int, like=None, shardings=None):
+        """Load one step. ``like`` (a pytree of the same structure, e.g.
+        from init or eval_shape) provides the treedef; ``shardings`` (same
+        structure, optional) reshards onto the current mesh. Raises on a
+        corrupt blob — use :meth:`restore_latest` for quarantine-and-
+        fall-back semantics."""
+        for s, name in self._blobs():
+            if s == step:
+                host, meta = self._load(name)
+                return self._unflatten(host, meta, like, shardings)
+        raise FileNotFoundError(f"no checkpoint for step {step} in "
+                                f"{self.dir}")
+
     def restore_latest(self, like=None, shardings=None):
-        steps = self.all_steps()
-        if not steps:
-            return None
+        """Newest *intact* checkpoint, or ``None`` with an empty dir.
+        Corrupt blobs met on the way down are quarantined and skipped."""
         if like is None:
             return None
-        return self.restore(steps[-1], like=like, shardings=shardings)
+        for _, name in reversed(self._blobs()):
+            try:
+                host, meta = self._load(name)
+            except Exception:
+                self._quarantine(name)
+                continue
+            return self._unflatten(host, meta, like, shardings)
+        return None

@@ -1,0 +1,446 @@
+"""Resilience layer tests (ISSUE 9 acceptance surface).
+
+Chaos scenarios, each gated on BITWISE parity with an undisturbed run
+wherever the design promises it: kill-at-sweep + resume (subprocess,
+``REPRO_CHAOS``), in-process checkpoint/resume, streamed OOM ->
+chunk-budget halving, compile failure -> backend ladder, transient upload
+failure -> retry-with-backoff, NaN burst -> rollback + ridge recovery,
+torn PlanCache blob -> quarantine + self-heal, resident OOM -> streaming
+fallback. Plus the pure pieces: snapshot roundtrip/quarantine, failure
+classification, ladder order, seeded backoff, ``REPRO_CHAOS`` parsing,
+and the ``resilience_report`` no-silent-degradation pairing.
+"""
+import os
+import signal
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.engine as engine
+from repro import obs
+from repro.core.cpd import cp_als
+from repro.core.flycoo import build_flycoo
+from repro.core.plancache import PlanCache
+from repro.engine import ExecutionConfig, PlanSpec, make_engine
+from repro.engine.stream import StreamState, cp_als_stream, stream_all_modes, stream_init
+from repro.resilience import (ChaosOOM, ChaosSpec, ChaosUploadError,
+                              DEFAULT_POLICY, LadderPolicy, Snapshot,
+                              SnapshotStore, backoff_delay, chaos, classify,
+                              fingerprint, install, next_backend,
+                              resolve_policy, uninstall)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _coo(nmodes=3, nnz=300, seed=0):
+    dims = (29, 23, 19, 13, 11, 7)[:nmodes]
+    rng = np.random.default_rng(seed)
+    idx = np.unique(
+        np.stack([rng.integers(0, d, nnz) for d in dims], 1)
+        .astype(np.int64), axis=0)
+    return idx, rng.standard_normal(len(idx)).astype(np.float32), dims
+
+
+def _factors(dims, rank=5, seed=1):
+    key = jax.random.PRNGKey(seed)
+    return tuple(
+        jax.random.normal(jax.random.fold_in(key, d), (dims[d], rank),
+                          jnp.float32) for d in range(len(dims)))
+
+
+@pytest.fixture(autouse=True)
+def _no_chaos_leak():
+    """Every test starts and ends with chaos uninstalled."""
+    uninstall()
+    yield
+    uninstall()
+
+
+def _tensor(**kw):
+    idx, val, dims = _coo(**kw)
+    return build_flycoo(idx, val, dims, rows_pp=8)
+
+
+# --------------------------------------------------------------------------
+# Pure pieces: classify / ladder order / backoff / env parsing / policy.
+# --------------------------------------------------------------------------
+def test_classify():
+    assert classify(ChaosOOM("x")) == "oom"
+    assert classify(ChaosUploadError("x")) == "transient"
+    assert classify(RuntimeError("RESOURCE_EXHAUSTED: out of memory")) \
+        == "oom"
+    assert classify(RuntimeError("Mosaic lowering failed")) == "compile"
+    assert classify(RuntimeError("transfer failed: connection reset")) \
+        == "transient"
+    assert classify(ValueError("bad rank")) == "fatal"
+
+
+def test_ladder_order_deterministic():
+    assert engine.config.BACKEND_LADDER == \
+        ("pallas_fused", "pallas", "xla", "ref")
+    chain, b = [], "pallas_fused"
+    while b is not None:
+        chain.append(b)
+        b = next_backend(b)
+    assert chain == ["pallas_fused", "pallas", "xla", "ref"]
+    assert next_backend("ref") is None
+    assert next_backend("not_a_backend") is None
+
+
+def test_backoff_seeded_and_bounded():
+    p = LadderPolicy(backoff_base_s=0.01, backoff_cap_s=0.05, jitter=0.5,
+                     seed=3)
+    delays = [backoff_delay(p, a, token="t") for a in range(6)]
+    assert delays == [backoff_delay(p, a, token="t") for a in range(6)]
+    assert all(0 <= d <= 0.05 for d in delays)
+    assert backoff_delay(p, 0, token="other") != delays[0]
+
+
+def test_resolve_policy():
+    assert resolve_policy(None) is None
+    assert resolve_policy(False) is None
+    assert resolve_policy(True) is DEFAULT_POLICY
+    p = LadderPolicy(max_retries=7)
+    assert resolve_policy(p) is p
+
+
+def test_chaos_from_env():
+    spec = chaos.from_env("upload_fail=1,oom_chunk=3,kill_sweep=2,"
+                          "compile_fail=pallas_fused|pallas,"
+                          "corrupt_blob,seed=7")
+    assert spec == ChaosSpec(seed=7, upload_fail=1, oom_chunk=3,
+                             kill_sweep=2,
+                             compile_fail=("pallas_fused", "pallas"),
+                             corrupt_blob=True)
+    with pytest.raises(ValueError):
+        chaos.from_env("explode=1")
+
+
+# --------------------------------------------------------------------------
+# Snapshot store: roundtrip, fingerprint binding, corrupt quarantine.
+# --------------------------------------------------------------------------
+def test_snapshot_roundtrip_and_gc(tmp_path):
+    store = SnapshotStore(str(tmp_path), keep=2)
+    idx, val, dims = _coo()
+    fp = fingerprint(idx, val, dims, 5)
+    factors = [np.asarray(f) for f in _factors(dims)]
+    lam = np.ones(5, np.float32)
+    for sweep in (1, 2, 3):
+        store.save(fp, sweep, factors, lam, fits=[0.1] * sweep)
+    snap = store.latest(fp)
+    assert snap is not None and snap.sweep == 3
+    assert snap.fingerprint == fp
+    for a, b in zip(snap.factors, factors):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(snap.lam, lam)
+    assert snap.fits == [0.1, 0.1, 0.1]
+    # retention: keep=2 leaves sweeps {2, 3}
+    assert len([n for n in os.listdir(tmp_path) if n.endswith(".npz")]) == 2
+    # a different problem never resumes from these blobs
+    fp2 = fingerprint(idx, val, dims, 6)
+    assert store.latest(fp2) is None
+
+
+def test_snapshot_corrupt_quarantine_falls_back(tmp_path):
+    store = SnapshotStore(str(tmp_path), keep=3)
+    idx, val, dims = _coo()
+    fp = fingerprint(idx, val, dims, 5)
+    factors = [np.asarray(f) for f in _factors(dims)]
+    lam = np.ones(5, np.float32)
+    store.save(fp, 1, factors, lam)
+    newest = store.save(fp, 2, factors, lam)
+    with open(newest, "r+b") as f:         # tear the newest blob
+        f.truncate(os.path.getsize(newest) // 2)
+    snap = store.latest(fp)
+    assert snap is not None and snap.sweep == 1   # fell back
+    assert store.corrupt == 1
+    assert os.path.exists(newest + ".corrupt")
+
+
+# --------------------------------------------------------------------------
+# Checkpoint/resume parity (in-process), resident + streamed.
+# --------------------------------------------------------------------------
+def test_cp_als_resume_bitwise(tmp_path):
+    t = _tensor()
+    full = cp_als(t, rank=4, iters=6)
+    half = cp_als(t, rank=4, iters=3, checkpoint=str(tmp_path))
+    resumed = cp_als(t, rank=4, iters=6, checkpoint=str(tmp_path),
+                     resume=True)
+    assert resumed.fits[:3] == half.fits
+    for a, b in zip(full.factors, resumed.factors):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(full.lam),
+                                  np.asarray(resumed.lam))
+    assert full.fits == resumed.fits
+
+
+def test_cp_als_stream_resume_bitwise(tmp_path):
+    t = _tensor()
+    config = ExecutionConfig(rows_pp=8, chunk_nnz=128)
+    full = cp_als_stream(t, rank=4, iters=6, config=config)
+    cp_als_stream(t, rank=4, iters=3, config=config,
+                  checkpoint=str(tmp_path))
+    resumed = cp_als_stream(t, rank=4, iters=6, config=config,
+                            checkpoint=str(tmp_path), resume=True)
+    for a, b in zip(full.factors, resumed.factors):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert full.fits == resumed.fits
+
+
+def test_make_engine_resume_shape_guard(tmp_path):
+    idx, val, dims = _coo()
+    wrong = Snapshot(fingerprint="0" * 64, sweep=1,
+                     factors=[np.zeros((d + 1, 4), np.float32)
+                              for d in dims],
+                     lam=np.ones(4, np.float32), fits=[], path="x")
+    with pytest.raises(ValueError, match="does not match this problem"):
+        make_engine((idx, val, dims), PlanSpec(), resume=wrong)
+    ok = Snapshot(fingerprint="0" * 64, sweep=1,
+                  factors=[np.zeros((d, 4), np.float32) for d in dims],
+                  lam=np.ones(4, np.float32), fits=[], path="x")
+    state = make_engine((idx, val, dims), PlanSpec(), resume=ok)
+    assert state is not None
+
+
+# --------------------------------------------------------------------------
+# Kill at sweep k (SIGKILL via REPRO_CHAOS) -> resume -> bitwise parity.
+# --------------------------------------------------------------------------
+_KILL_SCRIPT = """
+import sys
+import numpy as np
+from repro.core.flycoo import build_flycoo
+from repro.core.cpd import cp_als
+
+dims = (29, 23, 19)
+rng = np.random.default_rng(0)
+idx = np.unique(np.stack([rng.integers(0, d, 300) for d in dims], 1)
+                .astype(np.int64), axis=0)
+val = rng.standard_normal(len(idx)).astype(np.float32)
+t = build_flycoo(idx, val, dims, rows_pp=8)
+r = cp_als(t, rank=4, iters=6, checkpoint=sys.argv[1],
+           resume=(sys.argv[2] == "resume"))
+np.savez(sys.argv[3], *[np.asarray(f) for f in r.factors],
+         lam=np.asarray(r.lam), fits=np.asarray(r.fits))
+"""
+
+
+def _run_als_subprocess(ckpt_dir, out, mode, chaos_env=None):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop(chaos.ENV_VAR, None)
+    if chaos_env:
+        env[chaos.ENV_VAR] = chaos_env
+    return subprocess.run(
+        [sys.executable, "-c", _KILL_SCRIPT, ckpt_dir, mode, out],
+        env=env, capture_output=True, text=True, timeout=600)
+
+
+def test_kill_sweep_resume_bitwise(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    clean = str(tmp_path / "clean.npz")
+    resumed = str(tmp_path / "resumed.npz")
+    # uninterrupted reference (fresh process: identical jit environment)
+    r = _run_als_subprocess(ckpt + "_unused", clean, "fresh")
+    assert r.returncode == 0, r.stderr
+    # killed mid-run: SIGKILL at the start of sweep 3
+    r = _run_als_subprocess(ckpt, "/dev/null", "fresh",
+                            chaos_env="kill_sweep=3")
+    assert r.returncode == -signal.SIGKILL
+    assert os.listdir(ckpt), "no snapshot survived the kill"
+    # resume WITHOUT chaos; must replay sweeps 3..5 bitwise-identically
+    r = _run_als_subprocess(ckpt, resumed, "resume")
+    assert r.returncode == 0, r.stderr
+    with np.load(clean) as a, np.load(resumed) as b:
+        for name in a.files:
+            np.testing.assert_array_equal(a[name], b[name],
+                                          err_msg=name)
+
+
+# --------------------------------------------------------------------------
+# Streamed OOM at chunk k -> budget halving + replan, bitwise parity.
+# --------------------------------------------------------------------------
+def test_stream_oom_halves_chunk_budget_bitwise():
+    idx, val, dims = _coo()
+    t = build_flycoo(idx, val, dims, rows_pp=8)
+    config = ExecutionConfig(rows_pp=8, chunk_nnz=512)
+    factors = _factors(dims)
+    ss = stream_init(t, config)
+    outs_clean, _ = stream_all_modes(ss, factors)
+
+    install(ChaosSpec(oom_chunk=2))
+    ss = stream_init(t, config)
+    outs, ss = stream_all_modes(ss, factors, policy=DEFAULT_POLICY)
+    for d in range(t.nmodes):
+        np.testing.assert_array_equal(np.asarray(outs_clean[d]),
+                                      np.asarray(outs[d]),
+                                      err_msg=f"mode {d}")
+    # the degraded budget sticks on the returned state, and was recorded
+    assert ss.config.chunk_nnz is not None
+    assert ss.config.chunk_nnz < 512
+    degr = obs.REGISTRY.metrics()["resilience_degradations"].as_dict()
+    assert any(k.startswith("oom:") and k != "oom:full->stream"
+               for k in degr)
+
+
+def test_stream_oom_without_policy_raises():
+    idx, val, dims = _coo()
+    t = build_flycoo(idx, val, dims, rows_pp=8)
+    install(ChaosSpec(oom_chunk=0))
+    ss = stream_init(t, ExecutionConfig(rows_pp=8, chunk_nnz=512))
+    with pytest.raises(ChaosOOM):
+        stream_all_modes(ss, _factors(dims))
+
+
+# --------------------------------------------------------------------------
+# Transient upload failure -> retry with backoff, counted, parity.
+# --------------------------------------------------------------------------
+def test_upload_retry_bitwise_and_counted():
+    idx, val, dims = _coo()
+    t = build_flycoo(idx, val, dims, rows_pp=8)
+    config = ExecutionConfig(rows_pp=8, chunk_nnz=128)
+    factors = _factors(dims)
+    outs_clean, _ = stream_all_modes(stream_init(t, config), factors)
+
+    install(ChaosSpec(upload_fail=1, upload_fail_times=2))
+    policy = LadderPolicy(backoff_base_s=1e-4, backoff_cap_s=1e-3)
+    ss = stream_init(t, config)
+    outs, ss = stream_all_modes(ss, factors, policy=policy)
+    for d in range(t.nmodes):
+        np.testing.assert_array_equal(np.asarray(outs_clean[d]),
+                                      np.asarray(outs[d]))
+    assert ss.stats.upload_retries == 2
+    assert ss.stats.as_row()["upload_retries"] == 2
+
+
+def test_upload_retries_exhausted_raises():
+    idx, val, dims = _coo()
+    t = build_flycoo(idx, val, dims, rows_pp=8)
+    install(ChaosSpec(upload_fail=0, upload_fail_times=10))
+    policy = LadderPolicy(max_retries=2, backoff_base_s=1e-4,
+                          backoff_cap_s=1e-3)
+    ss = stream_init(t, ExecutionConfig(rows_pp=8, chunk_nnz=128))
+    with pytest.raises(ChaosUploadError):
+        stream_all_modes(ss, _factors(dims), policy=policy)
+
+
+# --------------------------------------------------------------------------
+# Compile failure -> backend ladder, bitwise parity with the landing rung.
+# --------------------------------------------------------------------------
+def test_backend_ladder_bitwise():
+    t = _tensor()
+    ref = cp_als(t, rank=4, iters=4, config=ExecutionConfig(backend="xla"))
+    install(ChaosSpec(compile_fail=("pallas_fused", "pallas")))
+    res = cp_als(t, rank=4, iters=4,
+                 config=ExecutionConfig(backend="pallas_fused"),
+                 ladder=True)
+    for a, b in zip(ref.factors, res.factors):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ref.fits == res.fits
+    degr = obs.REGISTRY.metrics()["resilience_degradations"].as_dict()
+    assert degr.get("compile:pallas_fused->pallas", 0) >= 1
+    assert degr.get("compile:pallas->xla", 0) >= 1
+
+
+def test_backend_ladder_off_raises():
+    t = _tensor()
+    install(ChaosSpec(compile_fail=("xla",)))
+    with pytest.raises(Exception, match="injected Mosaic"):
+        cp_als(t, rank=4, iters=2, config=ExecutionConfig(backend="xla"))
+
+
+# --------------------------------------------------------------------------
+# NaN burst -> rollback + ridge-recovery replay.
+# --------------------------------------------------------------------------
+def test_nan_rollback_recovers():
+    t = _tensor()
+    install(ChaosSpec(nan_sweep=2))
+    res = cp_als(t, rank=4, iters=5, ladder=True)
+    assert all(np.isfinite(np.asarray(f)).all() for f in res.factors)
+    assert np.isfinite(np.asarray(res.lam)).all()
+    assert len(res.fits) == 5 and np.isfinite(res.fits).all()
+    recov = obs.REGISTRY.metrics()["resilience_recoveries"].as_dict()
+    assert recov.get("nan_rollback", 0) >= 1
+
+
+def test_nan_without_ladder_reaches_results():
+    t = _tensor()
+    install(ChaosSpec(nan_sweep=1))
+    res = cp_als(t, rank=4, iters=3)     # no guard without a policy
+    # the burst lands in that sweep's fit — nothing rolled it back
+    assert np.isnan(res.fits[1])
+
+
+# --------------------------------------------------------------------------
+# PlanCache torn blob -> checksum quarantine + transparent self-heal.
+# --------------------------------------------------------------------------
+def test_plancache_corrupt_blob_quarantine_and_selfheal(tmp_path):
+    idx, val, dims = _coo()
+    install(ChaosSpec(corrupt_blob=True))   # tears the first disk save
+    c1 = PlanCache(path=str(tmp_path))
+    t1 = c1.get_tensor(idx, val, dims, rows_pp=8)
+    uninstall()
+    # fresh process-equivalent: load meets the torn blob, quarantines,
+    # rebuilds cold, re-persists
+    c2 = PlanCache(path=str(tmp_path))
+    t2 = c2.get_tensor(idx, val, dims, rows_pp=8)
+    assert c2.stats()["disk_corrupt"] == 1
+    assert any(n.endswith(".corrupt") for n in os.listdir(tmp_path))
+    np.testing.assert_array_equal(t1.values, t2.values)
+    # self-healed: the third load hits the re-persisted intact blob
+    c3 = PlanCache(path=str(tmp_path))
+    c3.get_tensor(idx, val, dims, rows_pp=8)
+    assert c3.stats()["disk_corrupt"] == 0
+    assert c3.stats()["disk_loads"] == 1
+
+
+# --------------------------------------------------------------------------
+# Resident-placement OOM -> streaming fallback (factory rung).
+# --------------------------------------------------------------------------
+def test_factory_resident_oom_falls_back_to_stream():
+    idx, val, dims = _coo()
+    install(ChaosSpec(oom_resident=True))
+    state = make_engine((idx, val, dims), PlanSpec(chunk_nnz=128),
+                        ladder=True)
+    assert isinstance(state, StreamState)
+    degr = obs.REGISTRY.metrics()["resilience_degradations"].as_dict()
+    assert degr.get("oom:full->stream", 0) >= 1
+
+
+def test_factory_resident_oom_without_ladder_raises():
+    idx, val, dims = _coo()
+    install(ChaosSpec(oom_resident=True))
+    with pytest.raises(ChaosOOM):
+        make_engine((idx, val, dims), PlanSpec())
+
+
+# --------------------------------------------------------------------------
+# resilience_report: every injected fault pairs with an answering event.
+# --------------------------------------------------------------------------
+def test_resilience_report_pairs_all_injections(tmp_path):
+    obs.REGISTRY.reset()     # pair THIS run's faults, not the session's
+    idx, val, dims = _coo()
+    t = build_flycoo(idx, val, dims, rows_pp=8)
+    install(ChaosSpec(upload_fail=1, oom_chunk=4, nan_sweep=1))
+    cp_als_stream(t, rank=4, iters=3,
+                  config=ExecutionConfig(rows_pp=8, chunk_nnz=512),
+                  ladder=LadderPolicy(backoff_base_s=1e-4,
+                                      backoff_cap_s=1e-3),
+                  checkpoint=str(tmp_path))
+    rep = obs.resilience_report()
+    for site in ("upload_fail", "oom_chunk", "nan_burst"):
+        assert site in rep["injections"]
+        assert site in rep["answered"]
+    assert rep["unanswered"] == []
+
+
+def test_resilience_report_flags_silent_faults():
+    obs.REGISTRY.reset()
+    install(ChaosSpec(nan_sweep=0))
+    t = _tensor(seed=3)
+    cp_als(t, rank=4, iters=2)          # no ladder: burst goes unanswered
+    rep = obs.resilience_report()
+    assert "nan_burst" in rep["unanswered"]
