@@ -17,6 +17,18 @@ injection spans included) and ``out/chaos_report.json`` (the pairing
 report) for the CI artifact.
 
     PYTHONPATH=src python examples/chaos_smoke.py
+
+``--mesh`` runs the distributed tier instead (requires >= 4 devices —
+CI forces fake CPU devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``): the exchange
+rung (``collective_permute -> all_gather``), device loss -> mesh shrink,
+transient dist dispatch retry, and the elastic kill/resume scenario — a
+4-device run SIGKILLed mid-sweep and resumed on 2 devices and on 1,
+gated bitwise against an uninterrupted 4-device run. Writes
+``out/dist_chaos_trace.json`` + ``out/dist_chaos_report.json``.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python examples/chaos_smoke.py --mesh
 """
 import argparse
 import json
@@ -167,15 +179,166 @@ def scenario_resident_oom() -> None:
     print("  [ok] fell back to the out-of-core tier")
 
 
+# --------------------------------------------------------------------------
+# Distributed tier (--mesh): dist rungs + elastic kill/resume.
+# --------------------------------------------------------------------------
+def _dist_tensor():
+    from repro.core.distributed import build_sharded_flycoo
+
+    t = _tensor()
+    return build_sharded_flycoo(np.asarray(t.indices),
+                                np.asarray(t.values), t.dims, n_dev=4,
+                                rows_pp=8, block_p=8)
+
+
+def child_run_mesh(ckpt_dir: str, out_npz: str, n_dev: int,
+                   resume: bool) -> None:
+    from repro.launch.mesh import make_mesh
+
+    t = _dist_tensor()
+    r = cp_als(t, rank=RANK, iters=ITERS, mesh=make_mesh((n_dev,),
+                                                         ("data",)),
+               checkpoint=ckpt_dir, resume=resume)
+    np.savez(out_npz, *[np.asarray(f) for f in r.factors],
+             lam=np.asarray(r.lam))
+
+
+def _spawn_mesh(ckpt_dir, out_npz, n_dev, *, resume=False, chaos_env=None):
+    env = dict(os.environ)
+    env.pop(chaos.ENV_VAR, None)
+    if chaos_env:
+        env[chaos.ENV_VAR] = chaos_env
+    # each child picks its own device count BEFORE importing jax
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    cmd = [sys.executable, os.path.abspath(__file__), "--child-mesh",
+           ckpt_dir, out_npz, str(n_dev)] + (["--resume"] if resume else [])
+    return subprocess.run(cmd, env=env, capture_output=True, text=True)
+
+
+def scenario_dist_exchange(clean) -> None:
+    from repro.launch.mesh import make_mesh
+
+    print("scenario: exchange failure -> permute -> all_gather rung")
+    install(ChaosSpec(exchange_fail=1, seed=SEED))
+    res = cp_als(_dist_tensor(), rank=RANK, iters=ITERS,
+                 mesh=make_mesh((4,), ("data",)), ladder=POLICY)
+    uninstall()
+    _bitwise("permute -> all_gather", clean, res)
+
+
+def scenario_dist_device_loss(out_dir: str, clean) -> None:
+    from repro.launch.mesh import make_mesh
+
+    print("scenario: device loss -> mesh shrink 4 -> 2 from snapshot")
+    install(ChaosSpec(device_lost=2, device_lost_n=2, seed=SEED))
+    res = cp_als(_dist_tensor(), rank=RANK, iters=ITERS,
+                 mesh=make_mesh((4,), ("data",)), ladder=POLICY,
+                 checkpoint=os.path.join(out_dir, "dist_ckpt"))
+    uninstall()
+    _bitwise("mesh shrink 4->2", clean, res)
+    degr = obs.REGISTRY.metrics()["resilience_degradations"].as_dict()
+    assert degr.get("device_lost:4->2", 0) >= 1, degr
+
+
+def scenario_dist_transient(clean) -> None:
+    from repro.launch.mesh import make_mesh
+
+    print("scenario: transient dist dispatch -> retry with backoff")
+    install(ChaosSpec(dist_transient=1, dist_transient_times=2, seed=SEED))
+    res = cp_als(_dist_tensor(), rank=RANK, iters=ITERS,
+                 mesh=make_mesh((4,), ("data",)), ladder=POLICY)
+    uninstall()
+    _bitwise("dist dispatch retry", clean, res)
+
+
+def scenario_elastic_kill_resume(out_dir: str) -> None:
+    import shutil
+
+    print("scenario: SIGKILL a 4-device sweep -> resume on 2 and on 1")
+    ckpt = os.path.join(out_dir, "elastic_ckpt")
+    clean = os.path.join(out_dir, "dist_clean.npz")
+    r = _spawn_mesh(os.path.join(out_dir, "elastic_unused"), clean, 4)
+    assert r.returncode == 0, r.stderr
+    r = _spawn_mesh(ckpt, os.path.join(out_dir, "dist_dead.npz"), 4,
+                    chaos_env=f"kill_sweep=3,seed={SEED}")
+    assert r.returncode == -signal.SIGKILL, (
+        f"chaos child should die by SIGKILL, got {r.returncode}\n"
+        f"{r.stderr}")
+    assert os.listdir(ckpt), "no sharded snapshot survived the kill"
+    for n_dev in (2, 1):
+        ckpt_n = os.path.join(out_dir, f"elastic_ckpt{n_dev}")
+        shutil.rmtree(ckpt_n, ignore_errors=True)
+        shutil.copytree(ckpt, ckpt_n)
+        resumed = os.path.join(out_dir, f"dist_resumed{n_dev}.npz")
+        r = _spawn_mesh(ckpt_n, resumed, n_dev, resume=True)
+        assert r.returncode == 0, r.stderr
+        with np.load(clean) as a, np.load(resumed) as b:
+            for name in a.files:
+                np.testing.assert_array_equal(
+                    a[name], b[name],
+                    err_msg=f"elastic resume on {n_dev} dev: {name}")
+        print(f"  [ok] resumed on {n_dev} device(s) == uninterrupted "
+              "4-device run (bitwise)")
+
+
+def main_mesh(out_dir: str) -> None:
+    import jax
+
+    from repro.launch.mesh import make_mesh
+
+    n = len(jax.devices())
+    assert n >= 4, (
+        f"--mesh needs >= 4 devices, found {n}; run under "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=4")
+    obs.enable()
+    uninstall()
+
+    t = _dist_tensor()
+    print(f"zipf tensor dims={DIMS} nnz={t.values.size} (4-device build)")
+    clean = cp_als(t, rank=RANK, iters=ITERS,
+                   mesh=make_mesh((4,), ("data",)))
+
+    scenario_dist_exchange(clean)
+    scenario_dist_device_loss(out_dir, clean)
+    scenario_dist_transient(clean)
+    scenario_elastic_kill_resume(out_dir)
+
+    report = obs.resilience_report()
+    with open(os.path.join(out_dir, "dist_chaos_report.json"), "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    obs.write_chrome_trace(os.path.join(out_dir, "dist_chaos_trace.json"))
+    print("\nresilience pairing (dist):")
+    for site in sorted(report["injections"]):
+        mark = "answered" if site in report["answered"] else "UNANSWERED"
+        print(f"  {site:<14} x{report['injections'][site]:<3} {mark}")
+    assert report["unanswered"] == [], (
+        f"silent degradation: {report['unanswered']}")
+    print("\nall dist chaos scenarios answered; wrote "
+          f"{out_dir}/dist_chaos_trace.json + "
+          f"{out_dir}/dist_chaos_report.json")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--child", nargs=2, metavar=("CKPT", "OUT"),
                     help="internal: run one ALS child process")
+    ap.add_argument("--child-mesh", nargs=3, metavar=("CKPT", "OUT", "NDEV"),
+                    help="internal: run one distributed ALS child process")
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--mesh", action="store_true",
+                    help="run the distributed chaos scenarios")
     ap.add_argument("--out", default="out")
     args = ap.parse_args()
     if args.child:
         child_run(args.child[0], args.child[1], args.resume)
+        return
+    if args.child_mesh:
+        child_run_mesh(args.child_mesh[0], args.child_mesh[1],
+                       int(args.child_mesh[2]), args.resume)
+        return
+    if args.mesh:
+        os.makedirs(args.out, exist_ok=True)
+        main_mesh(args.out)
         return
 
     os.makedirs(args.out, exist_ok=True)

@@ -18,6 +18,7 @@ Fit is computed with the standard sparse-CPD identity:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
 import jax
@@ -147,6 +148,19 @@ def cp_als(
       final factors vs an uninterrupted run, because at a sweep boundary
       the layout has rotated back to its start arrangement and
       ``(factors, lam)`` are the complete dynamic state.
+
+    Distributed resilience (``mesh`` given): snapshots are written in the
+    sharded v2 format (per-device factor shards + mesh fingerprint, see
+    :mod:`repro.resilience.snapshot`) but the problem fingerprint is
+    mesh-independent — a run killed on 4 devices resumes on 2 (or 1)
+    bitwise-identically, re-sharding onto the *current* mesh. With a
+    ladder, two extra rungs activate: an exchange failure steps
+    ``collective_permute -> all_gather`` (bitwise-identical by the
+    exchange parity guarantee), and a lost device shrinks the mesh —
+    the engine state is re-planned and re-sharded on the survivors and
+    the run rolls back to the latest snapshot (or the sweep boundary),
+    never silently. Transient dispatch failures retry with the same
+    seeded backoff stream uploads use.
     """
     if config is None:
         config = ExecutionConfig(backend=backend or "xla",
@@ -159,13 +173,18 @@ def cp_als(
     n = tensor.nmodes
     factors = tuple(init_factors(key, tensor.dims, rank))
     lam = jnp.ones((rank,), jnp.float32)
+    mesh_raw = None
     if mesh is not None:
         from repro.sharding import ShardingCtx
 
-        if dist is None and isinstance(mesh, ShardingCtx):
-            # ALS folds inside the sweep, which needs the full rank on
-            # every device — never inherit the ctx's tp axis here.
-            dist = engine.DistConfig(data_axis=mesh.data_axis)
+        if isinstance(mesh, ShardingCtx):
+            mesh_raw = mesh.mesh
+            if dist is None:
+                # ALS folds inside the sweep, which needs the full rank
+                # on every device — never inherit the ctx's tp axis here.
+                dist = engine.DistConfig(data_axis=mesh.data_axis)
+        else:
+            mesh_raw = mesh
     elif dist is not None:
         raise ValueError("dist config given without a mesh")
 
@@ -176,7 +195,11 @@ def cp_als(
         return st
 
     state = build_state(config)
-    sweep = engine.all_modes if mesh is None else engine.dist.dist_all_modes
+    if mesh is None:
+        sweep = engine.all_modes
+    else:
+        sweep = functools.partial(engine.dist.dist_all_modes,
+                                  policy=policy)
     norm_x_sq = float(np.sum(tensor.values.astype(np.float64) ** 2))
 
     store = as_store(checkpoint)
@@ -195,11 +218,13 @@ def cp_als(
                 fits = list(snap.fits)
                 first = snap.sweep
     backend_steps = 0
-    for i in range(first, iters):
+    i = first
+    while i < iters:
         cz = _chaos.active()
         if cz is not None:
             cz.maybe_kill(i)
         prev = (factors, lam)
+        rewind = None
         # One dispatch per sweep: scan over modes, ALS update in the fold.
         with span("cpd.sweep", sweep=i, streamed=False) as sp:
             fold = _als_fold
@@ -208,23 +233,76 @@ def cp_als(
                     outs, state, factors, lam = sweep(
                         state, factors, fold=fold, carry=lam)
                 except Exception as exc:
+                    if policy is None:
+                        raise
+                    kind = classify(exc)
                     # Compile/lowering failures happen before any factor
                     # update (the sweep is one program): step the backend
                     # down a rung, rebuild the state from the tensor (at a
                     # sweep boundary the layout bitwise-equals a fresh
                     # init), and retry the sweep.
-                    if policy is None or classify(exc) != "compile" \
-                            or backend_steps >= policy.max_backend_steps:
-                        raise
-                    nb = next_backend(state.config.backend)
-                    if nb is None:
-                        raise
-                    backend_steps += 1
-                    record_degradation("compile", state.config.backend, nb,
-                                       site="cpd.backend", sweep=i)
-                    state = build_state(dataclasses.replace(
-                        state.config, backend=nb))
-                    continue
+                    if kind == "compile" \
+                            and backend_steps < policy.max_backend_steps:
+                        nb = next_backend(state.config.backend)
+                        if nb is None:
+                            raise
+                        backend_steps += 1
+                        record_degradation("compile", state.config.backend,
+                                           nb, site="cpd.backend", sweep=i)
+                        state = build_state(dataclasses.replace(
+                            state.config, backend=nb))
+                        continue
+                    # Exchange failure: step collective_permute ->
+                    # all_gather (bitwise-identical by the exchange parity
+                    # guarantee) without re-sharding — only the traced
+                    # program changes.
+                    if kind == "exchange" and mesh is not None \
+                            and state.dist.exchange == "permute":
+                        record_degradation(
+                            "exchange", "permute", "all_gather",
+                            site="cpd.exchange", sweep=i)
+                        dist = dataclasses.replace(state.dist,
+                                                   exchange="all_gather")
+                        state = state.replace(dist=dist)
+                        continue
+                    # Device loss: shrink to the largest viable surviving
+                    # mesh, re-plan + re-shard there, and roll back to the
+                    # latest snapshot (or this sweep's boundary state).
+                    if kind == "device_lost" and mesh is not None:
+                        lost = getattr(exc, "lost", 1)
+                        old_n = int(state.n_dev)
+                        new_mesh = engine.dist.surviving_mesh(
+                            mesh_raw, lost,
+                            [p.kappa for p in tensor.plans],
+                            data_axis=(dist.data_axis if dist is not None
+                                       else "data"))
+                        new_n = int(np.asarray(
+                            new_mesh.devices).reshape(-1).size)
+                        record_degradation("device_lost", old_n, new_n,
+                                           site="cpd.mesh", sweep=i,
+                                           lost=lost)
+                        mesh = mesh_raw = new_mesh
+                        # Restore from the latest snapshot when there is
+                        # one (the real-loss path: device buffers are
+                        # gone); otherwise the in-memory sweep-boundary
+                        # state is already `prev`, untouched by the
+                        # failed dispatch.
+                        resume_at = i
+                        snap = store.latest(fp) if store is not None \
+                            else None
+                        if snap is not None:
+                            factors = tuple(jnp.asarray(f)
+                                            for f in snap.factors)
+                            lam = jnp.asarray(snap.lam)
+                            fits = list(snap.fits)
+                            resume_at = snap.sweep
+                        state = build_state(state.config)
+                        if resume_at == i:
+                            prev = (factors, lam)
+                            continue
+                        rewind = resume_at
+                        break
+                    raise
                 if cz is not None:
                     factors = tuple(cz.mangle_factors(i, factors))
                 if policy is not None \
@@ -242,16 +320,24 @@ def cp_als(
                     fold = _als_fold_recovery
                     continue
                 break
-            if track_fit:
+            if rewind is None and track_fit:
                 fit = _fit(norm_x_sq, outs[n - 1], factors, lam)
                 fits.append(fit)
                 sp.set("fit", float(fit))
                 _obs_gauge("cpd_fit", "latest ALS fit per tier").set(
                     "resident", float(fit))
+        if rewind is not None:
+            i = rewind
+            continue
         if store is not None and ((i + 1) % checkpoint_every == 0
                                   or i + 1 == iters):
-            store.save(fp, i + 1, [np.asarray(f) for f in factors],
-                       np.asarray(lam), fits)
+            if mesh is not None:
+                store.save(fp, i + 1, list(factors), np.asarray(lam),
+                           fits, mesh=mesh_raw, dist=state.dist)
+            else:
+                store.save(fp, i + 1, [np.asarray(f) for f in factors],
+                           np.asarray(lam), fits)
+        i += 1
     return CPDResult(factors=list(factors), lam=lam, fits=fits)
 
 

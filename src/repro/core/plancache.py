@@ -133,6 +133,9 @@ class PlanCache:
         self.disk_saves = 0
         self.disk_corrupt = 0
         self.last_outcome: str | None = None
+        self._stream_plans: dict[str, object] = {}
+        self.stream_hits = 0
+        self.stream_misses = 0
 
     # ------------------------------------------------------------------ api
     def get_tensor(
@@ -243,6 +246,28 @@ class PlanCache:
         self.last_outcome = "miss"
         return t
 
+    def get_stream_plan(self, key: str, builder):
+        """Structural tier for streamed chunk plans: ``key`` digests the
+        plan geometry + chunk-sizing knobs (``engine.stream.
+        _stream_plan_key``); ``builder`` runs on a miss. A degraded
+        replan (chunk-budget halving) whose budget point was chunked
+        before — or a re-init/resume of the same tensor — returns the
+        memoized ``StreamPlan`` (frozen, safely shared). Outcomes land on
+        the ``stream_replan_outcomes`` obs counter."""
+        plan = self._stream_plans.get(key)
+        outcome = "hit" if plan is not None else "miss"
+        if plan is None:
+            plan = builder()
+            self._stream_plans[key] = plan
+            self.stream_misses += 1
+        else:
+            self.stream_hits += 1
+        _obs_counter(
+            "stream_replan_outcomes",
+            "streamed chunk-plan lookups by level (hit/miss)",
+        ).inc(outcome)
+        return plan
+
     def stats(self) -> dict:
         return {
             "hits": self.hits,
@@ -251,12 +276,15 @@ class PlanCache:
             "disk_loads": self.disk_loads,
             "disk_saves": self.disk_saves,
             "disk_corrupt": self.disk_corrupt,
+            "stream_hits": self.stream_hits,
+            "stream_misses": self.stream_misses,
             "entries": sum(len(v) for v in self._by_key.values()),
         }
 
     def clear(self) -> None:
         self._by_key.clear()
         self._order.clear()
+        self._stream_plans.clear()
 
     # ------------------------------------------------------- disk persistence
     def _disk_key(self, dims_t: tuple, nnz: int, knobs: tuple,

@@ -134,10 +134,30 @@ Resilience (``repro.resilience``):
     stronger ridge (``resilience_recoveries`` counter).
   * **Chaos** — ``REPRO_CHAOS="upload_fail=1,oom_chunk=3,..."`` installs
     deterministic seeded fault injectors through the
-    stream/factory/plancache/dispatch hooks;
-    ``obs.resilience_report()`` pairs every injected fault with the
-    resilience event that answered it (the CI chaos gate asserts
-    ``unanswered == []``).
+    stream/factory/plancache/dispatch hooks (``engine.dist`` dispatch
+    included: ``exchange_fail=k``, ``device_lost=k``,
+    ``dist_transient=k``); ``obs.resilience_report()`` pairs every
+    injected fault with the resilience event that answered it (the CI
+    chaos gate asserts ``unanswered == []``).
+  * **Distributed resilience** — the ladder extends to the sharded tier.
+    Sharded runs write the **v2 sharded snapshot** format: per-device
+    factor shards keyed by row offset, plus the saving mesh's
+    fingerprint (device count, axis shape, platform) and the
+    ``DistConfig`` knobs inside the digest-covered meta. The *problem*
+    fingerprint deliberately excludes the mesh, so ``resume=True`` on a
+    **different** device count gathers the shards host-side and
+    re-shards onto the current mesh — elastic restart, bitwise-equal
+    final factors (device-major partition order makes the sweep
+    mesh-independent). Dist-specific rungs: an exchange failure steps
+    ``collective_permute -> all_gather`` (bitwise by the exchange
+    parity guarantee); a device loss shrinks the mesh onto the
+    survivors via ``dist.surviving_mesh`` (kappa-divisibility decides
+    the survivor count), rebuilds ``DistState``, and rolls back to the
+    latest snapshot — re-plan + re-shard, never silent; transient dist
+    dispatch failures retry with the same seeded backoff as stream
+    uploads (``resilience_retries["dist.dispatch"]``). ``REPRO_LADDER``
+    installs an ambient policy from the environment, mirroring
+    ``REPRO_CHAOS``.
 
 Migration from the deprecated stateful executor:
 
@@ -157,13 +177,13 @@ from .api import (init, mttkrp, all_modes, scan_jaxpr, reset_counters,
                   TRACE_COUNTS, DISPATCH_COUNTS, FoldFn)
 from . import dist
 from .dist import (DistConfig, DistState, ExchangeSchedule, shard_state,
-                   dist_mttkrp, dist_all_modes)
+                   dist_mttkrp, dist_all_modes, surviving_mesh)
 from .factory import PlanSpec, PlanSpace, make_engine, SPACE_DIMS
 from . import autotune
 from . import stream
 from .stream import (StreamPlan, StreamState, cp_als_stream, plan_stream,
-                     resident_bytes, stream_all_modes, stream_init,
-                     stream_mttkrp)
+                     plan_stream_cached, resident_bytes, stream_all_modes,
+                     stream_init, stream_mttkrp)
 
 __all__ = [
     "ExecutionConfig", "KAPPA_POLICIES", "SCHEDULES", "RESIDENCIES",
@@ -173,8 +193,9 @@ __all__ = [
     "compute_lrow", "init", "mttkrp", "all_modes", "scan_jaxpr",
     "reset_counters", "TRACE_COUNTS", "DISPATCH_COUNTS", "FoldFn",
     "dist", "DistConfig", "DistState", "ExchangeSchedule", "shard_state",
-    "dist_mttkrp", "dist_all_modes",
+    "dist_mttkrp", "dist_all_modes", "surviving_mesh",
     "PlanSpec", "PlanSpace", "make_engine", "SPACE_DIMS", "autotune",
     "stream", "StreamPlan", "StreamState", "stream_init", "stream_mttkrp",
-    "stream_all_modes", "cp_als_stream", "plan_stream", "resident_bytes",
+    "stream_all_modes", "cp_als_stream", "plan_stream",
+    "plan_stream_cached", "resident_bytes",
 ]

@@ -659,7 +659,37 @@ def _build_dist_step(dstate: DistState):
 # --------------------------------------------------------------------------
 # Public execution API.
 # --------------------------------------------------------------------------
-def dist_mttkrp(dstate: DistState, factors: Sequence[jax.Array]):
+def _gate_dispatch(dstate: DistState, policy, what: str):
+    """Run the chaos hook for one dist dispatch, retrying *transient*
+    failures with the same policy-driven backoff stream uploads use.
+    Non-transient faults (exchange, device loss, compile) propagate to
+    the caller's ladder. Yields nothing; returns after the gate passes.
+    """
+    attempt = 0
+    while True:
+        _c = _chaos.active()
+        if _c is None:
+            return
+        try:
+            _c.on_dist_dispatch(dstate.config.backend,
+                                exchange=dstate.dist.exchange,
+                                n_dev=int(dstate.n_dev), attempt=attempt)
+            return
+        except Exception as exc:
+            from repro.resilience.ladder import (backoff_delay, classify,
+                                                 record_retry)
+            if policy is None or classify(exc) != "transient" \
+                    or attempt >= policy.max_retries:
+                raise
+            record_retry("dist.dispatch", attempt,
+                         backoff_delay(policy, attempt,
+                                       token=(what, dstate.mode)),
+                         kind="dist")
+            attempt += 1
+
+
+def dist_mttkrp(dstate: DistState, factors: Sequence[jax.Array], *,
+                policy=None):
     """MTTKRP for the resident mode + cross-device remap exchange; returns
     ``(out, next_dstate)`` with ``out`` of shape ``(dims[mode], R)``."""
     key = ("dist_mttkrp", dstate.aux_key())
@@ -668,9 +698,7 @@ def dist_mttkrp(dstate: DistState, factors: Sequence[jax.Array]):
         donate = (0,) if dstate.config.resolve_donate() else ()
         fn = _JIT_CACHE[key] = jax.jit(_build_dist_step(dstate),
                                        donate_argnums=donate)
-    _c = _chaos.active()
-    if _c is not None:
-        _c.on_dispatch(dstate.config.backend)
+    _gate_dispatch(dstate, policy, "dist_mttkrp")
     DISPATCH_COUNTS["dist_mttkrp"] += 1
     with span("engine.dispatch", kind="dist_mttkrp", mode=dstate.mode,
               n_dev=int(dstate.n_dev)):
@@ -682,23 +710,23 @@ def dist_mttkrp(dstate: DistState, factors: Sequence[jax.Array]):
 
 
 def dist_all_modes(dstate: DistState, factors: Sequence[jax.Array], *,
-                   fold: FoldFn | None = None, carry=None):
+                   fold: FoldFn | None = None, carry=None, policy=None):
     """Distributed spMTTKRP along all modes: ONE jitted ``lax.scan`` under
     ``shard_map``, starting from any resident mode, with the sharded layout
     as (donation-ready) carry. Same contract as ``engine.all_modes``:
     without ``fold`` returns ``(outs, next_dstate)``; with ``fold`` (a
     stable module-level callable) returns
     ``(outs, next_dstate, factors, carry)`` — which is how distributed
-    CPD-ALS sweeps stay single traced programs."""
+    CPD-ALS sweeps stay single traced programs. ``policy`` (a
+    ``LadderPolicy``) retries transient dispatch failures in place; other
+    fault kinds propagate to the caller's ladder rungs."""
     key = ("dist_all_modes", dstate.aux_key(), fold)
     fn = _JIT_CACHE.get(key)
     if fn is None:
         donate = (0,) if dstate.config.resolve_donate() else ()
         fn = _JIT_CACHE[key] = jax.jit(_build_dist_scan(dstate, fold),
                                        donate_argnums=donate)
-    _c = _chaos.active()
-    if _c is not None:
-        _c.on_dispatch(dstate.config.backend)
+    _gate_dispatch(dstate, policy, "dist_all_modes")
     DISPATCH_COUNTS["dist_all_modes"] += 1
     with span("engine.dispatch", kind="dist_all_modes",
               start_mode=dstate.mode, n_dev=int(dstate.n_dev)):
@@ -710,6 +738,29 @@ def dist_all_modes(dstate: DistState, factors: Sequence[jax.Array], *,
     if fold is None:
         return list(outs), next_state
     return list(outs), next_state, list(out_factors), out_carry
+
+
+def surviving_mesh(mesh: Mesh, lost: int, kappas: Sequence[int],
+                   data_axis: str = "data") -> Mesh:
+    """The largest viable 1-D data mesh after ``lost`` devices die.
+
+    Simulated/elastic device loss drops the highest-ordinal devices; the
+    survivor count is then rounded *down* to the largest ``n`` that
+    divides every mode's partition count (``build_sharded_flycoo`` sizes
+    kappa as a multiple of the original device count, so halving always
+    works). Raises when nothing viable remains — losing the whole mesh is
+    not a rung, it is an outage.
+    """
+    devices = list(np.asarray(mesh.devices).reshape(-1))
+    alive = devices[:len(devices) - int(lost)]
+    n = len(alive)
+    while n >= 1 and any(int(k) % n for k in kappas):
+        n -= 1
+    if n < 1:
+        raise RuntimeError(
+            f"no viable mesh after losing {lost} of {len(devices)} "
+            f"device(s) (kappas {tuple(int(k) for k in kappas)})")
+    return Mesh(np.asarray(alive[:n]), (data_axis,))
 
 
 def lowered_text(dstate: DistState, factors: Sequence[jax.Array], *,
@@ -725,4 +776,4 @@ def lowered_text(dstate: DistState, factors: Sequence[jax.Array], *,
 __all__ = ["DistConfig", "DistState", "ExchangeSchedule", "shard_state",
            "dist_mttkrp", "dist_all_modes", "schedule_for_plans",
            "element_devices", "exchange_bytes", "row_bytes", "lowered_text",
-           "EXCHANGES"]
+           "surviving_mesh", "EXCHANGES"]

@@ -71,6 +71,10 @@ class PlanSpec:
     chunk_nnz: int | None = None
     device_budget_bytes: int | None = None
     stream_ring: int = 2
+    #: degradation-ladder default for engines built from this spec:
+    #: ``None`` defers to ``make_engine(ladder=...)`` and the ambient
+    #: ``REPRO_LADDER`` policy; ``True``/``False`` force it per spec.
+    ladder: bool | None = None
 
     def __post_init__(self):
         if self.exchange not in EXCHANGES:
@@ -188,7 +192,10 @@ def make_engine(tensor, spec: PlanSpec | None = None, *,
     enables the residency rung of the degradation ladder: if placing the
     *full* layout OOMs on a single device, the factory falls back to the
     streaming tier (recorded as a ``resilience_degradations`` counter +
-    span — never silent) instead of dying.
+    span — never silent) instead of dying. ``ladder=None`` defers first
+    to ``spec.ladder``, then to the ambient ``REPRO_LADDER`` env policy
+    (:func:`repro.resilience.ladder.from_env`) — fleet defaults need no
+    code changes.
 
     ``resume`` (a :class:`repro.resilience.Snapshot`) is validated
     against this engine's problem before any state is built: the snapshot
@@ -206,6 +213,8 @@ def make_engine(tensor, spec: PlanSpec | None = None, *,
 
     spec = (spec or PlanSpec()).canonical()
     config = spec.to_config()
+    if ladder is None:
+        ladder = spec.ladder
     policy = resolve_policy(ladder)
     if cache is None:
         cache = DEFAULT_CACHE

@@ -228,6 +228,48 @@ def plan_stream(tensor, config: ExecutionConfig) -> StreamPlan:
                       lstatics=lstatics, tables=tables)
 
 
+def _stream_plan_key(tensor, config: ExecutionConfig) -> str:
+    """Structural key of a :func:`plan_stream` result: the plan geometry
+    (per-mode partition/block structure) plus every config knob the chunk
+    sizing reads. Two tensors with identical structure — notably the SAME
+    tensor replanned under a degraded budget seen before — share a key."""
+    import hashlib
+
+    tables = _wants_tables(
+        config, mode_static_from_plan(tensor.plans[0]).schedule)
+    h = hashlib.sha256()
+    h.update(repr((tuple(int(d) for d in tensor.dims), int(tensor.nnz),
+                   config.chunk_nnz, config.device_budget_bytes,
+                   config.stream_ring, config.block_p, config.rank_hint,
+                   tables)).encode())
+    for p in tensor.plans:
+        h.update(repr((int(p.kappa), int(p.rows_pp), int(p.block_p),
+                       int(p.blocks_pp), int(p.nblocks),
+                       p.schedule)).encode())
+        h.update(np.ascontiguousarray(p.part_nnz).tobytes())
+        h.update(np.ascontiguousarray(p.block_part).tobytes())
+    return h.hexdigest()
+
+
+def plan_stream_cached(tensor, config: ExecutionConfig,
+                       cache=None) -> StreamPlan:
+    """:func:`plan_stream` through the :class:`~repro.core.plancache.
+    PlanCache` structural tier — a replan under a config seen before
+    (streaming re-init, resume, or a chunk-budget ladder rung replaying a
+    degraded budget) is a cache hit instead of a from-scratch chunking.
+    ``cache=None`` uses the process default; ``cache=False`` plans cold.
+    Hits/misses land on the ``stream_replan_outcomes`` obs counter."""
+    from repro.core.plancache import DEFAULT_CACHE
+
+    if cache is None:
+        cache = DEFAULT_CACHE
+    elif cache is False:
+        return plan_stream(tensor, config)
+    return cache.get_stream_plan(
+        _stream_plan_key(tensor, config),
+        lambda: plan_stream(tensor, config))
+
+
 def stream_transfer_model(tensor, config: ExecutionConfig) -> dict:
     """Modeled transfer traffic of one full streamed rotation: per-mode
     chunk H2D bytes (uniformly padded uploads) and remap-fragment bytes
@@ -269,6 +311,8 @@ class StreamStats:
     uploads: int = 0
     overlapped_uploads: int = 0   # uploads issued ahead of their compute
     upload_retries: int = 0       # transient-failure upload re-attempts
+    budget_halvings: int = 0      # chunk-budget ladder rungs taken (OOM)
+    backend_steps: int = 0        # backend ladder rungs taken (compile)
     peak_ring_bytes: int = 0      # max live device bytes of the chunk ring
     peak_ring_chunks: int = 0
 
@@ -290,6 +334,8 @@ class StreamStats:
             "chunks_streamed": self.chunks_streamed,
             "modes_streamed": self.modes_streamed,
             "upload_retries": self.upload_retries,
+            "budget_halvings": self.budget_halvings,
+            "backend_steps": self.backend_steps,
             "peak_ring_bytes": self.peak_ring_bytes,
             "peak_ring_chunks": self.peak_ring_chunks,
             "overlap_efficiency": self.overlap_efficiency,
@@ -385,7 +431,7 @@ def stream_init(tensor, config: ExecutionConfig | None = None,
             raise ValueError(
                 f"start_mode {start_mode} out of range for {n} modes")
         statics = tuple(mode_static_from_plan(p) for p in tensor.plans)
-        plan = plan_stream(tensor, config)
+        plan = plan_stream_cached(tensor, config, cache=cache)
         sp.set("total_chunks", plan.total_chunks)
         sp.set("target_slots", plan.target_slots)
 
@@ -509,9 +555,11 @@ def _with_config(state: StreamState,
     """Rebuild the chunk plan under a degraded config. Safe mid-rotation:
     a failed mode attempt mutates neither the host layout nor the factors
     (the accumulator and next-mode fragments it built are local), and the
-    chunk plan is derived purely from ``tensor`` + ``config``."""
+    chunk plan is derived purely from ``tensor`` + ``config``. Goes
+    through the plan-cache structural tier: a degraded replan whose
+    (structure, budget) point was chunked before is a cache hit."""
     return state.replace(config=config,
-                         plan=plan_stream(state.tensor, config))
+                         plan=plan_stream_cached(state.tensor, config))
 
 
 def stream_mttkrp(state: StreamState, factors: Sequence[jax.Array],
@@ -545,6 +593,7 @@ def stream_mttkrp(state: StreamState, factors: Sequence[jax.Array],
                 if new >= cur:
                     raise
                 halvings += 1
+                state.stats.budget_halvings += 1
                 record_degradation("oom", cur, new,
                                    site="stream.chunk_budget",
                                    mode=state.mode)
@@ -557,6 +606,7 @@ def stream_mttkrp(state: StreamState, factors: Sequence[jax.Array],
                 if nb is None:
                     raise
                 steps += 1
+                state.stats.backend_steps += 1
                 record_degradation("compile", state.config.backend, nb,
                                    site="stream.backend", mode=state.mode)
                 state = _with_config(
@@ -776,7 +826,8 @@ def cp_als_stream(tensor, rank: int, iters: int = 10, key=None,
 
 
 __all__ = ["StreamPlan", "StreamState", "StreamStats", "plan_stream",
-           "stream_init", "stream_mttkrp", "stream_all_modes",
+           "plan_stream_cached", "stream_init", "stream_mttkrp",
+           "stream_all_modes",
            "cp_als_stream", "resident_bytes", "resolve_chunk_slots",
            "stream_transfer_model", "stream_fixed_bytes", "bytes_per_slot",
            "chunk_device_bytes", "DEFAULT_CHUNK_SLOTS"]

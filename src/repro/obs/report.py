@@ -173,7 +173,9 @@ def resilience_report(registry: MetricsRegistry | None = None) -> dict:
     a NaN rollback recovery; ``corrupt_blob`` -> a quarantined
     plan-cache blob; ``kill_sweep`` -> a snapshot load (only observable
     in the *resumed* process — the injection itself dies with the killed
-    one).
+    one). Distributed sites: ``exchange_fail`` -> the ``permute ->
+    all_gather`` exchange rung; ``device_lost`` -> a mesh-shrink
+    degradation; ``dist_transient`` -> a ``dist.dispatch`` retry.
     """
     registry = registry or REGISTRY
     metrics = {m["name"]: m.get("values", {}) for m in registry.collect()}
@@ -200,6 +202,12 @@ def resilience_report(registry: MetricsRegistry | None = None) -> dict:
             return cache.get("disk_corrupt", 0) > 0
         if site == "kill_sweep":
             return snap.get("load", 0) > 0
+        if site == "exchange_fail":
+            return any(k.startswith("exchange:") for k in degr)
+        if site == "device_lost":
+            return any(k.startswith("device_lost:") for k in degr)
+        if site == "dist_transient":
+            return retries.get("dist.dispatch", 0) > 0
         return False
 
     return {

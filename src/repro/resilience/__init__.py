@@ -13,26 +13,47 @@ what lets those runs *finish*:
     and replays the remaining sweeps — bitwise-identical final factors
     vs an uninterrupted run, because at a sweep boundary ``(factors,
     lam)`` are the complete dynamic state (the layout has rotated back
-    to its start arrangement).
+    to its start arrangement). Distributed sweeps write the *sharded*
+    v2 format — per-device factor shards plus the saving mesh's
+    fingerprint and ``DistConfig`` knobs inside the digest-covered
+    meta. The problem fingerprint stays mesh-independent, so an elastic
+    restart on a different device count restores the reassembled
+    factors and re-shards them onto the *current* mesh, still bitwise.
 
 :mod:`~repro.resilience.ladder`
-    Policy-driven retry/fallback chain: compile/lowering failures step
-    the backend down ``pallas_fused -> pallas -> xla -> ref``; OOM steps
-    residency ``full -> stream`` or halves the streamed chunk budget and
-    replans; transient upload failures retry with bounded exponential
-    backoff and seeded jitter. Every transition is a
-    ``resilience_degradations``/``resilience_retries`` counter + span —
-    degradations are observable, never silent.
+    Policy-driven retry/fallback chain. The rung table:
+
+    ======================  =======================================
+    failure                 rung
+    ======================  =======================================
+    compile / lowering      backend ``pallas_fused -> pallas ->
+                            xla -> ref`` (rebuild state, bitwise)
+    OOM (resident place)    residency ``full -> stream``
+    OOM (streamed chunk)    chunk budget halved + replan (cached)
+    transient transfer      retry with seeded backoff
+    exchange (dist)         ``collective_permute -> all_gather``
+                            (bitwise by the exchange parity test)
+    device lost (dist)      mesh shrink: re-plan + re-shard on the
+                            survivors, roll back to latest snapshot
+    transient dist dispatch retry with seeded backoff
+    ======================  =======================================
+
+    Every transition is a ``resilience_degradations``/
+    ``resilience_retries`` counter + span — degradations are
+    observable, never silent. ``REPRO_LADDER=...`` installs an ambient
+    policy from the environment (``ladder.from_env``), picked up by
+    every ``ladder=None`` call site.
 
 :mod:`~repro.resilience.chaos`
     Deterministic seeded fault injectors (upload failure, OOM at chunk
     k, resident-placement OOM, compile failure per backend, NaN burst,
-    SIGKILL at sweep k, torn cache blob) threaded through the
-    stream/factory/plancache/dispatch hooks. ``REPRO_CHAOS=...``
-    installs a spec from the environment (subprocess / CI scenarios);
-    every fired fault ticks ``chaos_injections`` so
-    :func:`repro.obs.report.resilience_report` can pair faults with the
-    resilience events that answered them.
+    SIGKILL at sweep k, torn cache blob; distributed: exchange failure,
+    device loss, transient dist dispatch) threaded through the
+    stream/factory/plancache/dispatch hooks — ``engine.dist`` included.
+    ``REPRO_CHAOS=...`` installs a spec from the environment
+    (subprocess / CI scenarios); every fired fault ticks
+    ``chaos_injections`` so :func:`repro.obs.report.resilience_report`
+    can pair faults with the resilience events that answered them.
 
 :mod:`~repro.resilience.guard`
     Per-sweep NaN/Inf detection; on a burst the sweep is rolled back and
@@ -43,25 +64,29 @@ digest (:func:`snapshot.payload_digest`) to checksum-verify every blob
 load, quarantining corrupt files (``*.corrupt``) and rebuilding cold —
 counted as ``disk_corrupt`` in ``PlanCache.stats()``.
 """
-from . import chaos
-from .chaos import (Chaos, ChaosCompileError, ChaosError, ChaosOOM,
-                    ChaosSpec, ChaosUploadError, active, from_env, install,
-                    uninstall)
-from .snapshot import (Snapshot, SnapshotStore, as_store, fingerprint,
-                       payload_digest)
-from .ladder import (DEFAULT_POLICY, LadderPolicy, backoff_delay, classify,
-                     next_backend, record_degradation, record_retry,
-                     resolve_policy)
+from . import chaos, ladder
+from .chaos import (Chaos, ChaosCompileError, ChaosDeviceLost, ChaosError,
+                    ChaosExchangeError, ChaosOOM, ChaosSpec, ChaosUploadError,
+                    active, from_env, install, uninstall)
+from .snapshot import (Snapshot, SnapshotStore, as_store, factor_shards,
+                       fingerprint, mesh_fingerprint, payload_digest)
+from .ladder import (DEFAULT_POLICY, LadderPolicy, ambient, backoff_delay,
+                     classify, install_ambient, next_backend,
+                     record_degradation, record_retry, resolve_policy,
+                     uninstall_ambient)
 from .guard import all_finite, record_recovery
 
+# NOTE: package-level ``from_env`` is *chaos*'s (REPRO_CHAOS); the ladder's
+# REPRO_LADDER parser stays module-scoped as ``ladder.from_env``.
 __all__ = [
-    "chaos", "Chaos", "ChaosSpec", "ChaosError", "ChaosUploadError",
-    "ChaosOOM", "ChaosCompileError", "install", "uninstall", "active",
-    "from_env",
+    "chaos", "ladder", "Chaos", "ChaosSpec", "ChaosError",
+    "ChaosUploadError", "ChaosOOM", "ChaosCompileError",
+    "ChaosExchangeError", "ChaosDeviceLost", "install", "uninstall",
+    "active", "from_env",
     "Snapshot", "SnapshotStore", "as_store", "fingerprint",
-    "payload_digest",
+    "payload_digest", "mesh_fingerprint", "factor_shards",
     "LadderPolicy", "DEFAULT_POLICY", "classify", "next_backend",
     "backoff_delay", "record_degradation", "record_retry",
-    "resolve_policy",
+    "resolve_policy", "ambient", "install_ambient", "uninstall_ambient",
     "all_finite", "record_recovery",
 ]

@@ -42,9 +42,25 @@ Fault model (``ChaosSpec`` fields):
   ``nan_sweep``      overwrite one factor entry with NaN after sweep N
                      (answered by rollback + ridge-recovery re-sweep)
   ``kill_sweep``     SIGKILL the process at the *start* of sweep N
-                     (answered by checkpoint/resume)
+                     (answered by checkpoint/resume — works under a mesh
+                     too: ``cp_als(mesh=...)`` calls the same hook)
   ``corrupt_blob``   truncate the next ``PlanCache`` disk blob after it
                      lands (answered by checksum quarantine + rebuild)
+
+Distributed fault model (hook site: ``engine.dist`` dispatch):
+
+  ``exchange_fail``  raise :class:`ChaosExchangeError` at the Nth dist
+                     dispatch running the ``collective_permute``
+                     exchange, once (answered by the ``permute ->
+                     all_gather`` ladder rung — bitwise-identical by the
+                     exchange parity guarantee)
+  ``device_lost``    raise :class:`ChaosDeviceLost` at the Nth dist
+                     dispatch, once; ``device_lost_n`` devices die
+                     (answered by mesh-shrink: re-plan + re-shard on the
+                     survivors from the latest snapshot)
+  ``dist_transient`` fail the Nth dist dispatch transiently for
+                     ``dist_transient_times`` attempts (answered by the
+                     same retry-with-backoff path stream uploads have)
 """
 from __future__ import annotations
 
@@ -56,8 +72,9 @@ from repro.obs.metrics import counter as _counter
 from repro.obs.trace import span as _span
 
 __all__ = ["ChaosError", "ChaosUploadError", "ChaosOOM",
-           "ChaosCompileError", "ChaosSpec", "Chaos", "install",
-           "uninstall", "active", "from_env", "ENV_VAR"]
+           "ChaosCompileError", "ChaosExchangeError", "ChaosDeviceLost",
+           "ChaosSpec", "Chaos", "install", "uninstall", "active",
+           "from_env", "ENV_VAR"]
 
 ENV_VAR = "REPRO_CHAOS"
 
@@ -78,6 +95,18 @@ class ChaosCompileError(ChaosError):
     """Injected kernel compile/lowering failure."""
 
 
+class ChaosExchangeError(ChaosError):
+    """Injected collective-exchange (``collective_permute``) failure."""
+
+
+class ChaosDeviceLost(ChaosError):
+    """Injected device loss; ``lost`` carries how many devices died."""
+
+    def __init__(self, msg: str, lost: int = 1):
+        super().__init__(msg)
+        self.lost = lost
+
+
 @dataclasses.dataclass(frozen=True)
 class ChaosSpec:
     """Declarative, seeded fault plan (see module docstring)."""
@@ -91,10 +120,19 @@ class ChaosSpec:
     nan_sweep: int | None = None
     kill_sweep: int | None = None
     corrupt_blob: bool = False
+    exchange_fail: int | None = None
+    device_lost: int | None = None
+    device_lost_n: int = 1
+    dist_transient: int | None = None
+    dist_transient_times: int = 1
 
     def __post_init__(self):
         if self.upload_fail_times < 1:
             raise ValueError("upload_fail_times must be >= 1")
+        if self.dist_transient_times < 1:
+            raise ValueError("dist_transient_times must be >= 1")
+        if self.device_lost_n < 1:
+            raise ValueError("device_lost_n must be >= 1")
 
 
 class Chaos:
@@ -106,6 +144,9 @@ class Chaos:
         self._upload_ordinal: dict = {}      # (mode, chunk) -> ordinal
         self._upload_attempts: dict = {}     # (mode, chunk) -> failed tries
         self._compute_calls = 0
+        self._dist_calls = 0                 # distinct dist dispatches
+        self._exchange_calls = 0             # ... of which run permute
+        self._dist_attempts = 0              # transient tries at target
         self._fired: set[str] = set()
 
     # ------------------------------------------------------------- recording
@@ -172,6 +213,55 @@ class Chaos:
             raise ChaosCompileError(
                 f"injected Mosaic lowering failure for backend "
                 f"{backend!r}")
+
+    def on_dist_dispatch(self, backend: str, *, exchange: str, n_dev: int,
+                         attempt: int = 0) -> None:
+        """Called before each distributed (``engine.dist``) dispatch.
+
+        Ordinals advance once per *distinct* dispatch (``attempt == 0``)
+        so a retried dispatch stays addressed by the same ordinal. Order
+        of checks: compile (shares ``compile_fail`` with the resident
+        path) -> device loss -> exchange failure -> transient.
+        """
+        self.on_dispatch(backend)
+        if attempt == 0:
+            ordinal = self._dist_calls
+            self._dist_calls += 1
+            exchange_ordinal = self._exchange_calls
+            if exchange == "permute":
+                self._exchange_calls += 1
+        else:
+            ordinal = self._dist_calls - 1
+            exchange_ordinal = self._exchange_calls - 1
+        at = self.spec.device_lost
+        if at is not None and ordinal == at \
+                and "device_lost" not in self._fired:
+            lost = self.spec.device_lost_n
+            self._fired.add("device_lost")
+            self._record("device_lost", ordinal=ordinal, lost=lost,
+                         n_dev=n_dev)
+            raise ChaosDeviceLost(
+                f"injected loss of {lost} device(s) at dist dispatch "
+                f"{ordinal} (mesh had {n_dev})", lost=lost)
+        at = self.spec.exchange_fail
+        if at is not None and exchange == "permute" \
+                and exchange_ordinal == at \
+                and "exchange_fail" not in self._fired:
+            self._fired.add("exchange_fail")
+            self._record("exchange_fail", ordinal=exchange_ordinal)
+            raise ChaosExchangeError(
+                f"injected collective_permute failure at dist dispatch "
+                f"{exchange_ordinal}")
+        at = self.spec.dist_transient
+        if at is not None and ordinal == at \
+                and self._dist_attempts < self.spec.dist_transient_times:
+            self._dist_attempts += 1
+            self._fired.add("dist_transient")
+            self._record("dist_transient", ordinal=ordinal,
+                         attempt=attempt)
+            raise ChaosUploadError(
+                f"injected transient dist dispatch failure at ordinal "
+                f"{ordinal} (attempt {attempt})")
 
     def mangle_factors(self, sweep: int, factors):
         """Called after each ALS sweep; injects one NaN into factor 0 at
@@ -257,7 +347,9 @@ def from_env(value: str) -> ChaosSpec:
         elif key == "compile_fail":
             kwargs[key] = tuple(b for b in raw.split("|") if b)
         elif key in ("seed", "upload_fail", "upload_fail_times",
-                     "oom_chunk", "nan_sweep", "kill_sweep"):
+                     "oom_chunk", "nan_sweep", "kill_sweep",
+                     "exchange_fail", "device_lost", "device_lost_n",
+                     "dist_transient", "dist_transient_times"):
             kwargs[key] = int(raw)
         else:
             raise ValueError(f"unknown {ENV_VAR} key {key!r}")

@@ -13,26 +13,45 @@ chaos runs replay identically. Every transition is recorded as a
 span — a fallback that leaves no metric is a bug the CI ``chaos-smoke``
 job catches.
 
+The distributed tier adds two rungs of its own: an exchange failure
+steps ``collective_permute -> all_gather`` (bitwise-identical by the
+exchange parity guarantee, ``engine.dist``), and a lost device shrinks
+the mesh — ``DistState`` is re-planned and re-sharded on the survivors
+from the latest snapshot (``core.cpd.cp_als``). Distributed dispatch
+gets the same transient retry-with-backoff path stream uploads have.
+
 This module owns the shared pieces (classification, policy, backoff,
 recording); the *application* sites live where the failures happen —
-``core.cpd.cp_als`` (backend rungs per sweep), ``engine.stream``
+``core.cpd.cp_als`` (backend + dist rungs per sweep), ``engine.stream``
 (chunk-budget rungs + upload retries), ``engine.factory`` (residency
-rung).
+rung), ``engine.dist`` (dispatch retries).
+
+Fleet defaults need no code changes: ``REPRO_LADDER=1`` (or a
+``key=value`` spec mirroring :class:`LadderPolicy` fields, e.g.
+``REPRO_LADDER="max_retries=5,backoff_cap_s=1.0"``) installs an
+*ambient* policy at import time — any ``ladder=None`` call site picks it
+up through :func:`resolve_policy`; ``ladder=False`` still opts out
+explicitly.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
 import time
 
 from repro.obs.metrics import counter as _counter
 from repro.obs.trace import span as _span
 
-from .chaos import ChaosCompileError, ChaosOOM, ChaosUploadError
+from .chaos import (ChaosCompileError, ChaosDeviceLost,
+                    ChaosExchangeError, ChaosOOM, ChaosUploadError)
 
 __all__ = ["LadderPolicy", "DEFAULT_POLICY", "classify", "next_backend",
            "backoff_delay", "record_degradation", "record_retry",
-           "resolve_policy"]
+           "resolve_policy", "from_env", "install_ambient",
+           "uninstall_ambient", "ambient", "ENV_VAR"]
+
+ENV_VAR = "REPRO_LADDER"
 
 # Substrings identifying real JAX/XLA failure flavors without importing
 # backend-specific exception types (which vary across jax versions).
@@ -42,6 +61,10 @@ _COMPILE_MARKERS = ("mosaic", "lowering", "unsupported", "unimplemented",
                     "triton")
 _TRANSIENT_MARKERS = ("unavailable", "deadline_exceeded",
                       "connection reset", "transfer failed")
+_DEVICE_LOST_MARKERS = ("device lost", "device is lost",
+                        "failed to query device")
+_EXCHANGE_MARKERS = ("collective_permute", "ppermute",
+                     "collective timed out")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,11 +105,38 @@ class LadderPolicy:
 
 DEFAULT_POLICY = LadderPolicy()
 
+_AMBIENT: LadderPolicy | None = None
+
+
+def install_ambient(policy: LadderPolicy) -> LadderPolicy:
+    """Install ``policy`` as the process-wide default picked up by every
+    ``ladder=None`` call site (the ``chaos.install`` pattern)."""
+    global _AMBIENT
+    if not isinstance(policy, LadderPolicy):
+        raise TypeError("install_ambient wants a LadderPolicy")
+    _AMBIENT = policy
+    return _AMBIENT
+
+
+def uninstall_ambient() -> LadderPolicy | None:
+    """Remove the ambient policy (``ladder=None`` means off again)."""
+    global _AMBIENT
+    prev, _AMBIENT = _AMBIENT, None
+    return prev
+
+
+def ambient() -> LadderPolicy | None:
+    """The ambient (env/process-default) policy, or ``None``."""
+    return _AMBIENT
+
 
 def resolve_policy(ladder) -> LadderPolicy | None:
-    """Normalize a user-facing ``ladder=`` argument: ``None``/``False``
-    -> off, ``True`` -> :data:`DEFAULT_POLICY`, a policy -> itself."""
-    if ladder is None or ladder is False:
+    """Normalize a user-facing ``ladder=`` argument: ``None`` -> the
+    ambient policy (env default; off when none installed), ``False`` ->
+    off, ``True`` -> :data:`DEFAULT_POLICY`, a policy -> itself."""
+    if ladder is None:
+        return _AMBIENT
+    if ladder is False:
         return None
     if ladder is True:
         return DEFAULT_POLICY
@@ -96,8 +146,43 @@ def resolve_policy(ladder) -> LadderPolicy | None:
                     f"got {type(ladder).__name__}")
 
 
+def from_env(value: str) -> LadderPolicy:
+    """Parse a ``REPRO_LADDER`` policy string (mirrors ``chaos.from_env``).
+
+    ``"1"``/``"true"``/``"default"`` mean :data:`DEFAULT_POLICY`;
+    otherwise comma-separated ``key=value`` items naming
+    :class:`LadderPolicy` fields::
+
+        REPRO_LADDER="max_retries=5,backoff_cap_s=1.0,seed=7"
+    """
+    value = value.strip()
+    if value.lower() in ("1", "true", "on", "default"):
+        return DEFAULT_POLICY
+    fields = {f.name: f.type for f in dataclasses.fields(LadderPolicy)}
+    kwargs: dict = {}
+    for item in value.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        key, _, raw = item.partition("=")
+        key, raw = key.strip(), raw.strip()
+        if key not in fields:
+            raise ValueError(f"unknown {ENV_VAR} key {key!r}")
+        kwargs[key] = (float(raw) if "float" in str(fields[key])
+                       else int(raw))
+    return LadderPolicy(**kwargs)
+
+
+def _init_from_env() -> None:
+    value = os.environ.get(ENV_VAR, "").strip()
+    if not value or value.lower() in ("0", "false", "off"):
+        return
+    install_ambient(from_env(value))
+
+
 def classify(exc: BaseException) -> str:
-    """Failure taxonomy: ``"oom" | "compile" | "transient" | "fatal"``.
+    """Failure taxonomy: ``"oom" | "compile" | "transient" |
+    "device_lost" | "exchange" | "fatal"``.
 
     Chaos-injected faults classify by type; real JAX/XLA failures by
     well-known message markers (jax wraps most of them in
@@ -109,6 +194,10 @@ def classify(exc: BaseException) -> str:
         return "oom"
     if isinstance(exc, ChaosCompileError):
         return "compile"
+    if isinstance(exc, ChaosDeviceLost):
+        return "device_lost"
+    if isinstance(exc, ChaosExchangeError):
+        return "exchange"
     if isinstance(exc, ChaosUploadError):
         return "transient"
     if isinstance(exc, MemoryError):
@@ -118,6 +207,10 @@ def classify(exc: BaseException) -> str:
         return "oom"
     if any(m in msg for m in _COMPILE_MARKERS):
         return "compile"
+    if any(m in msg for m in _DEVICE_LOST_MARKERS):
+        return "device_lost"
+    if any(m in msg for m in _EXCHANGE_MARKERS):
+        return "exchange"
     if any(m in msg for m in _TRANSIENT_MARKERS):
         return "transient"
     return "fatal"
@@ -175,3 +268,6 @@ def record_retry(what: str, attempt: int, delay_s: float, **attrs) -> None:
                delay_s=delay_s, **attrs):
         if delay_s > 0:
             time.sleep(delay_s)
+
+
+_init_from_env()

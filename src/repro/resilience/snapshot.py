@@ -24,6 +24,20 @@ makes sweep boundaries durable:
 Layout: ``<dir>/<fp16>-sweep<NNNNNN>-<digest12>.npz`` — one flat npz per
 snapshot (per-factor arrays + ``lam`` + ``fits`` + a JSON meta string),
 ``keep`` newest retained per fingerprint.
+
+**Sharded payloads (format v2).** A distributed sweep saves *per-device
+factor shards* (``factor{i}_s{j}`` keyed by row offset) instead of one
+monolithic array per factor, plus the saving mesh's fingerprint
+(:func:`mesh_fingerprint`: device count, axis layout, platform) and the
+``DistConfig`` knobs — both live in the JSON meta and are therefore part
+of the payload digest. The *problem* fingerprint deliberately excludes
+them: at a sweep boundary ``(factors, lam)`` are layout- and
+mesh-independent, so a snapshot written on 4 devices restores on 2 (or
+1) — :meth:`SnapshotStore.load` reassembles the shards host-side and the
+caller re-shards onto the *current* mesh (``engine.dist.shard_state``,
+the ``training/checkpoint.py`` reshard-on-load idiom). The recorded mesh
+fingerprint says where the shards came from; it never constrains where
+they may go.
 """
 from __future__ import annotations
 
@@ -39,10 +53,11 @@ import numpy as np
 from repro.obs.metrics import counter as _counter
 from repro.obs.trace import span as _span
 
-__all__ = ["fingerprint", "payload_digest", "Snapshot", "SnapshotStore",
-           "as_store"]
+__all__ = ["fingerprint", "payload_digest", "mesh_fingerprint",
+           "factor_shards", "Snapshot", "SnapshotStore", "as_store"]
 
 _FORMAT_VERSION = 1
+_SHARDED_VERSION = 2
 _NAME_RE = re.compile(
     r"(?P<fp>[0-9a-f]{16})-sweep(?P<sweep>\d{6})-(?P<digest>[0-9a-f]{12})"
     r"\.npz")
@@ -82,6 +97,37 @@ def payload_digest(arrays: dict) -> str:
     return h.hexdigest()
 
 
+def mesh_fingerprint(mesh) -> dict:
+    """JSON-able identity of a device mesh: total device count, the
+    ``{axis: size}`` layout and the platform of its devices. Recorded in
+    sharded snapshot meta (and hence the payload digest) so a restore can
+    tell — and report — that it is re-sharding onto a different mesh."""
+    devices = np.asarray(mesh.devices).reshape(-1)
+    return {"n_dev": int(devices.size),
+            "axes": {str(k): int(v) for k, v in dict(mesh.shape).items()},
+            "platform": str(getattr(devices[0], "platform", "unknown"))}
+
+
+def factor_shards(arr) -> list[tuple[int, np.ndarray]]:
+    """``(row_offset, host_shard)`` pairs covering ``arr`` exactly once.
+
+    A jax array sharded along axis 0 yields one entry per distinct row
+    range (replicas deduplicated); a replicated or plain host array
+    yields a single ``(0, full)`` entry. Row order is ascending, so
+    concatenation reassembles the array.
+    """
+    shards = getattr(arr, "addressable_shards", None)
+    if shards is None:
+        return [(0, np.asarray(arr))]
+    seen: dict[int, np.ndarray] = {}
+    for sh in shards:
+        idx = sh.index[0] if sh.index else slice(None)
+        row0 = int(idx.start or 0)
+        if row0 not in seen:
+            seen[row0] = np.asarray(sh.data)
+    return sorted(seen.items())
+
+
 def as_store(checkpoint) -> "SnapshotStore | None":
     """Normalize a user-facing ``checkpoint=`` argument: ``None``/``False``
     -> off, a directory path -> a fresh :class:`SnapshotStore` over it, a
@@ -104,6 +150,8 @@ class Snapshot:
     lam: np.ndarray
     fits: list[float]
     path: str
+    mesh: dict | None = None      # saving mesh's fingerprint (v2 blobs)
+    dist: str | None = None       # DistConfig repr at save time (v2)
 
 
 class SnapshotStore:
@@ -126,15 +174,38 @@ class SnapshotStore:
 
     # ------------------------------------------------------------------ save
     def save(self, fp: str, sweep: int, factors, lam,
-             fits: Sequence[float] = ()) -> str:
-        """Persist one completed-sweep state; returns the blob path."""
+             fits: Sequence[float] = (), *, mesh=None, dist=None) -> str:
+        """Persist one completed-sweep state; returns the blob path.
+
+        With ``mesh=`` the blob is written in the sharded v2 format:
+        per-device factor shards plus the mesh fingerprint and the
+        ``DistConfig`` repr in the digest-covered meta (module
+        docstring). Without it the flat v1 format is written unchanged.
+        """
         with _span("resilience.snapshot_save", sweep=sweep) as sp:
-            arrays = {f"factor{i}": np.asarray(f)
-                      for i, f in enumerate(factors)}
+            arrays: dict = {}
+            if mesh is not None:
+                shard_meta = []
+                for i, f in enumerate(factors):
+                    shards = factor_shards(f)
+                    shard_meta.append(
+                        {"rows": [r for r, _ in shards],
+                         "shape": [int(s) for s in np.shape(f)]})
+                    for j, (_, data) in enumerate(shards):
+                        arrays[f"factor{i}_s{j}"] = data
+            else:
+                for i, f in enumerate(factors):
+                    arrays[f"factor{i}"] = np.asarray(f)
             arrays["lam"] = np.asarray(lam)
             arrays["fits"] = np.asarray(list(fits), dtype=np.float64)
-            meta = {"version": _FORMAT_VERSION, "fingerprint": fp,
-                    "sweep": int(sweep), "n_factors": len(factors)}
+            meta = {"version": (_SHARDED_VERSION if mesh is not None
+                                else _FORMAT_VERSION),
+                    "fingerprint": fp, "sweep": int(sweep),
+                    "n_factors": len(factors)}
+            if mesh is not None:
+                meta["shards"] = shard_meta
+                meta["mesh"] = mesh_fingerprint(mesh)
+                meta["dist"] = repr(dist)
             arrays["meta"] = np.frombuffer(
                 json.dumps(meta).encode(), dtype=np.uint8)
             digest = payload_digest(arrays)
@@ -186,9 +257,18 @@ class SnapshotStore:
             with np.load(path) as blob:
                 arrays = {name: blob[name] for name in blob.files}
             meta = json.loads(bytes(arrays["meta"]).decode())
-            # recompute in save order: factors, lam, fits, meta
-            ordered = {f"factor{i}": arrays[f"factor{i}"]
-                       for i in range(meta["n_factors"])}
+            sharded = meta["version"] >= _SHARDED_VERSION
+            # recompute in save order: factors (or their shards), lam,
+            # fits, meta
+            ordered: dict = {}
+            if sharded:
+                for i, sm in enumerate(meta["shards"]):
+                    for j in range(len(sm["rows"])):
+                        ordered[f"factor{i}_s{j}"] = \
+                            arrays[f"factor{i}_s{j}"]
+            else:
+                for i in range(meta["n_factors"]):
+                    ordered[f"factor{i}"] = arrays[f"factor{i}"]
             ordered["lam"] = arrays["lam"]
             ordered["fits"] = arrays["fits"]
             ordered["meta"] = arrays["meta"]
@@ -197,14 +277,26 @@ class SnapshotStore:
                 raise ValueError(
                     f"snapshot payload digest mismatch: {path}")
             sp.set("sweep", meta["sweep"])
+            if sharded:
+                factors = []
+                for i, sm in enumerate(meta["shards"]):
+                    first = arrays[f"factor{i}_s0"]
+                    full = np.empty(tuple(sm["shape"]), dtype=first.dtype)
+                    for j, row0 in enumerate(sm["rows"]):
+                        data = arrays[f"factor{i}_s{j}"]
+                        full[row0:row0 + data.shape[0]] = data
+                    factors.append(full)
+            else:
+                factors = [arrays[f"factor{i}"]
+                           for i in range(meta["n_factors"])]
         self.loads += 1
         _counter("snapshot_events",
                  "sweep snapshot saves/loads/corruptions").inc("load")
         return Snapshot(
             fingerprint=meta["fingerprint"], sweep=meta["sweep"],
-            factors=[arrays[f"factor{i}"]
-                     for i in range(meta["n_factors"])],
-            lam=arrays["lam"], fits=list(arrays["fits"]), path=path)
+            factors=factors, lam=arrays["lam"],
+            fits=list(arrays["fits"]), path=path,
+            mesh=meta.get("mesh"), dist=meta.get("dist"))
 
     def latest(self, fp: str) -> Snapshot | None:
         """Newest intact snapshot for ``fp``; corrupt blobs met on the

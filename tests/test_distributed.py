@@ -9,6 +9,7 @@ import subprocess
 import sys
 import textwrap
 
+import numpy as np
 import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -503,6 +504,205 @@ def test_pipeline_parallel_matches_sequential():
         print("PIPELINE_OK")
     """)
     assert "PIPELINE_OK" in out
+
+
+def test_dist_exchange_rung_bitwise():
+    """Injected collective_permute failure steps the exchange rung
+    ``permute -> all_gather`` mid-run; final factors stay bitwise-equal
+    to an undisturbed permute run (the PR-3 exchange parity, now a
+    resilience guarantee)."""
+    out = run_sub("""
+        from repro import engine, obs
+        from repro.core import cp_als
+        from repro.core.distributed import build_sharded_flycoo
+        from repro.launch.mesh import make_mesh
+        from repro.resilience import ChaosSpec, LadderPolicy, install
+
+        rng = np.random.default_rng(0)
+        dims = (24, 18, 12)
+        idx = np.unique(np.stack(
+            [rng.integers(0, d, 600) for d in dims], 1).astype(np.int32),
+            axis=0)
+        val = rng.standard_normal(idx.shape[0]).astype(np.float32)
+        t = build_sharded_flycoo(idx, val, dims, n_dev=4, rows_pp=4,
+                                 block_p=8)
+        mesh = make_mesh((4,), ("data",))
+        clean = cp_als(t, rank=4, iters=4, mesh=mesh)
+
+        install(ChaosSpec(exchange_fail=1))   # 2nd permute dispatch dies
+        pol = LadderPolicy(backoff_base_s=1e-4, backoff_cap_s=1e-3)
+        res = cp_als(t, rank=4, iters=4, mesh=mesh, ladder=pol)
+        for a, b in zip(clean.factors, res.factors):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert clean.fits == res.fits
+        degr = obs.REGISTRY.metrics()[
+            "resilience_degradations"].as_dict()
+        assert degr.get("exchange:permute->all_gather", 0) == 1, degr
+        rep = obs.resilience_report()
+        assert "exchange_fail" in rep["answered"]
+        assert rep["unanswered"] == []
+        print("EXCHANGE_RUNG_OK")
+    """, devices=4)
+    assert "EXCHANGE_RUNG_OK" in out
+
+
+def test_dist_device_loss_shrinks_mesh_bitwise():
+    """Losing 2 of 4 devices mid-run rebuilds the engine on the surviving
+    2-device mesh from the latest snapshot and finishes bitwise-equal to
+    an undisturbed 4-device run."""
+    out = run_sub("""
+        import tempfile
+        from repro import engine, obs
+        from repro.core import cp_als
+        from repro.core.distributed import build_sharded_flycoo
+        from repro.launch.mesh import make_mesh
+        from repro.resilience import ChaosSpec, LadderPolicy, install
+
+        rng = np.random.default_rng(0)
+        dims = (24, 18, 12)
+        idx = np.unique(np.stack(
+            [rng.integers(0, d, 600) for d in dims], 1).astype(np.int32),
+            axis=0)
+        val = rng.standard_normal(idx.shape[0]).astype(np.float32)
+        t = build_sharded_flycoo(idx, val, dims, n_dev=4, rows_pp=4,
+                                 block_p=8)
+        mesh = make_mesh((4,), ("data",))
+        clean = cp_als(t, rank=4, iters=5, mesh=mesh)
+
+        install(ChaosSpec(device_lost=2, device_lost_n=2))
+        pol = LadderPolicy(backoff_base_s=1e-4, backoff_cap_s=1e-3)
+        res = cp_als(t, rank=4, iters=5, mesh=mesh, ladder=pol,
+                     checkpoint=tempfile.mkdtemp())
+        for a, b in zip(clean.factors, res.factors):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert clean.fits == res.fits
+        degr = obs.REGISTRY.metrics()[
+            "resilience_degradations"].as_dict()
+        assert degr.get("device_lost:4->2", 0) == 1, degr
+        rep = obs.resilience_report()
+        assert "device_lost" in rep["answered"]
+        assert rep["unanswered"] == []
+        # without a ladder the loss is fatal, never silent
+        install(ChaosSpec(device_lost=0))
+        try:
+            cp_als(t, rank=4, iters=2, mesh=mesh)
+        except Exception as exc:
+            assert "injected loss" in str(exc)
+        else:
+            raise AssertionError("device loss must raise without ladder")
+        print("DEVICE_LOSS_OK")
+    """, devices=4)
+    assert "DEVICE_LOSS_OK" in out
+
+
+def test_dist_transient_dispatch_retries_bitwise():
+    """A transiently failing dist dispatch retries with seeded backoff
+    (the stream-upload path, at the dist hook site) and converges to the
+    clean run bitwise."""
+    out = run_sub("""
+        from repro import engine, obs
+        from repro.core import cp_als
+        from repro.core.distributed import build_sharded_flycoo
+        from repro.launch.mesh import make_mesh
+        from repro.resilience import ChaosSpec, LadderPolicy, install
+
+        rng = np.random.default_rng(0)
+        dims = (24, 18, 12)
+        idx = np.unique(np.stack(
+            [rng.integers(0, d, 600) for d in dims], 1).astype(np.int32),
+            axis=0)
+        val = rng.standard_normal(idx.shape[0]).astype(np.float32)
+        t = build_sharded_flycoo(idx, val, dims, n_dev=4, rows_pp=4,
+                                 block_p=8)
+        mesh = make_mesh((2,), ("data",))
+        clean = cp_als(t, rank=4, iters=3, mesh=mesh)
+
+        install(ChaosSpec(dist_transient=1, dist_transient_times=2))
+        pol = LadderPolicy(backoff_base_s=1e-4, backoff_cap_s=1e-3)
+        res = cp_als(t, rank=4, iters=3, mesh=mesh, ladder=pol)
+        for a, b in zip(clean.factors, res.factors):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        retries = obs.REGISTRY.metrics()["resilience_retries"].as_dict()
+        assert retries.get("dist.dispatch", 0) == 2, retries
+        rep = obs.resilience_report()
+        assert "dist_transient" in rep["answered"]
+        assert rep["unanswered"] == []
+        print("DIST_TRANSIENT_OK")
+    """, devices=4)
+    assert "DIST_TRANSIENT_OK" in out
+
+
+# --------------------------------------------------------------------------
+# Elastic kill-resume: SIGKILL a 4-device sweep, resume on 2 and on 1.
+# --------------------------------------------------------------------------
+_ELASTIC_SCRIPT = """
+import os
+import sys
+os.environ["XLA_FLAGS"] = \
+    "--xla_force_host_platform_device_count=" + sys.argv[4]
+import numpy as np
+from repro.core.cpd import cp_als
+from repro.core.distributed import build_sharded_flycoo
+from repro.launch.mesh import make_mesh
+
+dims = (24, 18, 12)
+rng = np.random.default_rng(0)
+idx = np.unique(np.stack([rng.integers(0, d, 600) for d in dims], 1)
+                .astype(np.int32), axis=0)
+val = rng.standard_normal(len(idx)).astype(np.float32)
+# the tensor is always the 4-device build: its kappas (multiples of 4)
+# divide every smaller mesh, which is what makes the restart elastic
+t = build_sharded_flycoo(idx, val, dims, n_dev=4, rows_pp=4, block_p=8)
+mesh = make_mesh((int(sys.argv[4]),), ("data",))
+r = cp_als(t, rank=4, iters=6, mesh=mesh, checkpoint=sys.argv[1],
+           resume=(sys.argv[2] == "resume"))
+np.savez(sys.argv[3], *[np.asarray(f) for f in r.factors],
+         lam=np.asarray(r.lam), fits=np.asarray(r.fits))
+"""
+
+
+def _run_elastic(ckpt_dir, out, mode, devices, chaos_env=None, timeout=900):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("REPRO_CHAOS", None)
+    if chaos_env:
+        env["REPRO_CHAOS"] = chaos_env
+    return subprocess.run(
+        [sys.executable, "-c", _ELASTIC_SCRIPT, ckpt_dir, mode, out,
+         str(devices)],
+        env=env, capture_output=True, text=True, timeout=timeout)
+
+
+def test_elastic_kill_resume_across_device_counts(tmp_path):
+    """The ISSUE-10 acceptance scenario: a 4-device distributed run is
+    SIGKILLed mid-sweep; resuming from its sharded snapshots on 2 devices
+    AND on 1 device replays the remaining sweeps bitwise-identically to
+    an uninterrupted 4-device run."""
+    import shutil
+    import signal as _signal
+
+    ckpt = str(tmp_path / "ckpt")
+    clean = str(tmp_path / "clean.npz")
+    # uninterrupted 4-device reference
+    r = _run_elastic(str(tmp_path / "unused"), clean, "fresh", 4)
+    assert r.returncode == 0, r.stderr
+    # SIGKILL at the start of sweep 3 on 4 devices
+    r = _run_elastic(ckpt, "/dev/null", "fresh", 4,
+                     chaos_env="kill_sweep=3")
+    assert r.returncode == -_signal.SIGKILL, (r.returncode, r.stderr)
+    assert os.listdir(ckpt), "no snapshot survived the kill"
+    with np.load(clean) as a:
+        ref = {name: a[name] for name in a.files}
+    for n_dev in (2, 1):
+        ckpt_n = str(tmp_path / f"ckpt{n_dev}")
+        shutil.copytree(ckpt, ckpt_n)
+        out = str(tmp_path / f"resumed{n_dev}.npz")
+        r = _run_elastic(ckpt_n, out, "resume", n_dev)
+        assert r.returncode == 0, r.stderr
+        with np.load(out) as b:
+            for name in ref:
+                np.testing.assert_array_equal(
+                    ref[name], b[name],
+                    err_msg=f"{name} (resumed on {n_dev} devices)")
 
 
 def test_elastic_checkpoint_reshard():

@@ -28,11 +28,13 @@ from repro.core.flycoo import build_flycoo
 from repro.core.plancache import PlanCache
 from repro.engine import ExecutionConfig, PlanSpec, make_engine
 from repro.engine.stream import StreamState, cp_als_stream, stream_all_modes, stream_init
-from repro.resilience import (ChaosOOM, ChaosSpec, ChaosUploadError,
-                              DEFAULT_POLICY, LadderPolicy, Snapshot,
-                              SnapshotStore, backoff_delay, chaos, classify,
-                              fingerprint, install, next_backend,
-                              resolve_policy, uninstall)
+from repro.resilience import (ChaosDeviceLost, ChaosExchangeError, ChaosOOM,
+                              ChaosSpec, ChaosUploadError, DEFAULT_POLICY,
+                              LadderPolicy, Snapshot, SnapshotStore,
+                              backoff_delay, chaos, classify, factor_shards,
+                              fingerprint, install, install_ambient, ladder,
+                              next_backend, resolve_policy, uninstall,
+                              uninstall_ambient)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -121,6 +123,64 @@ def test_chaos_from_env():
         chaos.from_env("explode=1")
 
 
+def test_chaos_from_env_dist_keys():
+    spec = chaos.from_env("exchange_fail=0,device_lost=2,device_lost_n=2,"
+                          "dist_transient=1,dist_transient_times=3")
+    assert spec == ChaosSpec(exchange_fail=0, device_lost=2,
+                             device_lost_n=2, dist_transient=1,
+                             dist_transient_times=3)
+
+
+def test_classify_dist_kinds():
+    assert classify(ChaosDeviceLost("gone", lost=2)) == "device_lost"
+    assert classify(ChaosExchangeError("x")) == "exchange"
+    assert classify(RuntimeError("INTERNAL: device lost")) == "device_lost"
+    assert classify(RuntimeError(
+        "collective_permute deadline exceeded")) == "exchange"
+    assert ChaosDeviceLost("gone", lost=2).lost == 2
+
+
+def test_ladder_from_env_and_ambient():
+    assert ladder.from_env("1") is DEFAULT_POLICY
+    assert ladder.from_env("default") is DEFAULT_POLICY
+    p = ladder.from_env("max_retries=7,backoff_base_s=0.001")
+    assert p.max_retries == 7 and p.backoff_base_s == 0.001
+    with pytest.raises(ValueError):
+        ladder.from_env("not_a_knob=1")
+    prev = ladder.ambient()
+    try:
+        install_ambient(p)
+        assert ladder.ambient() is p
+        assert resolve_policy(None) is p      # None defers to ambient
+        assert resolve_policy(False) is None  # False stays off
+        assert resolve_policy(True) is DEFAULT_POLICY
+    finally:
+        uninstall_ambient()
+        if prev is not None:
+            install_ambient(prev)
+    assert resolve_policy(None) is prev
+
+
+def test_chaos_dist_hook_fires_and_counts():
+    install(ChaosSpec(exchange_fail=1, device_lost=3, device_lost_n=2))
+    cz = chaos.active()
+    cz.on_dist_dispatch("xla", exchange="permute", n_dev=4)   # ordinal 0
+    with pytest.raises(ChaosExchangeError):                   # ordinal 1
+        cz.on_dist_dispatch("xla", exchange="permute", n_dev=4)
+    # fired once: the retried dispatch (attempt>0) does not re-raise
+    cz.on_dist_dispatch("xla", exchange="permute", n_dev=4, attempt=1)
+    cz.on_dist_dispatch("xla", exchange="all_gather", n_dev=4)  # ordinal 2
+    with pytest.raises(ChaosDeviceLost) as ei:                  # ordinal 3
+        cz.on_dist_dispatch("xla", exchange="all_gather", n_dev=4)
+    assert ei.value.lost == 2
+    # all_gather dispatches never consume exchange ordinals
+    install(ChaosSpec(exchange_fail=0))
+    cz = chaos.active()
+    cz.on_dist_dispatch("xla", exchange="all_gather", n_dev=4)
+    with pytest.raises(ChaosExchangeError):
+        cz.on_dist_dispatch("xla", exchange="permute", n_dev=4)
+
+
 # --------------------------------------------------------------------------
 # Snapshot store: roundtrip, fingerprint binding, corrupt quarantine.
 # --------------------------------------------------------------------------
@@ -144,6 +204,82 @@ def test_snapshot_roundtrip_and_gc(tmp_path):
     # a different problem never resumes from these blobs
     fp2 = fingerprint(idx, val, dims, 6)
     assert store.latest(fp2) is None
+
+
+def test_factor_shards_reassembly_order():
+    full = np.arange(24, dtype=np.float32).reshape(6, 4)
+
+    class _Shard:
+        def __init__(self, row0, row1):
+            self.index = (slice(row0, row1), slice(None))
+            self.data = full[row0:row1]
+
+    class _Sharded:
+        shape, dtype = full.shape, full.dtype
+        # replicas out of order + duplicated: dedup by row offset
+        addressable_shards = [_Shard(3, 6), _Shard(0, 3), _Shard(3, 6)]
+
+    shards = factor_shards(_Sharded())
+    assert [r for r, _ in shards] == [0, 3]
+    np.testing.assert_array_equal(np.concatenate([d for _, d in shards]),
+                                  full)
+    # plain host array: one full shard at row 0
+    (row0, data), = factor_shards(full)
+    assert row0 == 0
+    np.testing.assert_array_equal(data, full)
+
+
+def test_snapshot_sharded_v2_roundtrip(tmp_path):
+    from repro.engine.dist import DistConfig
+    from repro.launch.mesh import make_mesh
+
+    store = SnapshotStore(str(tmp_path))
+    idx, val, dims = _coo()
+    fp = fingerprint(idx, val, dims, 5)
+    factors = [np.asarray(f) for f in _factors(dims)]
+    lam = np.ones(5, np.float32)
+    mesh = make_mesh((1,), ("data",))
+    dist = DistConfig(exchange="all_gather")
+    store.save(fp, 2, factors, lam, fits=[0.5, 0.6], mesh=mesh, dist=dist)
+    snap = store.latest(fp)
+    assert snap is not None and snap.sweep == 2
+    for a, b in zip(snap.factors, factors):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(snap.lam, lam)
+    # v2 meta: the saving mesh's fingerprint + DistConfig repr survive
+    assert snap.mesh == {"n_dev": 1, "axes": {"data": 1},
+                         "platform": "cpu"}
+    assert snap.dist == repr(dist)
+    # v1 blobs keep loading with no mesh meta
+    store.save(fp, 3, factors, lam)
+    snap = store.latest(fp)
+    assert snap.sweep == 3 and snap.mesh is None and snap.dist is None
+
+
+def test_snapshot_sharded_v2_multi_shard_load(tmp_path):
+    """Multi-shard blobs (as a >1-device mesh writes) reassemble on load —
+    exercised host-side with fake sharded arrays."""
+    full = np.arange(48, dtype=np.float32).reshape(12, 4)
+
+    class _Shard:
+        def __init__(self, row0, row1):
+            self.index = (slice(row0, row1), slice(None))
+            self.data = full[row0:row1]
+
+    class _Sharded:
+        shape, dtype = full.shape, full.dtype
+        addressable_shards = [_Shard(0, 6), _Shard(6, 12)]
+
+    class _Mesh:
+        devices = np.array(jax.devices()[:1])
+        shape = {"data": 1}
+
+    store = SnapshotStore(str(tmp_path))
+    fp = "ab" * 32
+    store.save(fp, 1, [_Sharded()], np.ones(4, np.float32), mesh=_Mesh())
+    snap = store.latest(fp)
+    assert snap is not None
+    np.testing.assert_array_equal(snap.factors[0], full)
 
 
 def test_snapshot_corrupt_quarantine_falls_back(tmp_path):
@@ -293,6 +429,68 @@ def test_stream_oom_without_policy_raises():
     ss = stream_init(t, ExecutionConfig(rows_pp=8, chunk_nnz=512))
     with pytest.raises(ChaosOOM):
         stream_all_modes(ss, _factors(dims))
+
+
+def test_stream_replan_goes_through_plan_cache():
+    """The chunk-budget rung's replan is a PlanCache structural-tier
+    lookup: same geometry + knobs -> hit, changed chunk budget -> miss."""
+    from repro.engine.stream import plan_stream_cached
+
+    idx, val, dims = _coo()
+    t = build_flycoo(idx, val, dims, rows_pp=8)
+    cache = PlanCache()
+    cfg = ExecutionConfig(rows_pp=8, chunk_nnz=256)
+    p1 = plan_stream_cached(t, cfg, cache=cache)
+    p2 = plan_stream_cached(t, cfg, cache=cache)
+    assert p2 is p1
+    assert cache.stats()["stream_misses"] == 1
+    assert cache.stats()["stream_hits"] == 1
+    # a halved budget is a different structural key -> plans once, then hits
+    half = ExecutionConfig(rows_pp=8, chunk_nnz=128)
+    plan_stream_cached(t, half, cache=cache)
+    p4 = plan_stream_cached(t, half, cache=cache)
+    assert cache.stats()["stream_misses"] == 2
+    assert cache.stats()["stream_hits"] == 2
+    assert p4.chunks[0].nchunks >= p1.chunks[0].nchunks
+    # cache=False forces a cold replan
+    assert plan_stream_cached(t, cfg, cache=False) is not p1
+
+
+def test_stream_oom_counts_budget_halvings():
+    idx, val, dims = _coo()
+    t = build_flycoo(idx, val, dims, rows_pp=8)
+    install(ChaosSpec(oom_chunk=1))
+    ss = stream_init(t, ExecutionConfig(rows_pp=8, chunk_nnz=512))
+    _, ss = stream_all_modes(ss, _factors(dims), policy=DEFAULT_POLICY)
+    assert ss.stats.budget_halvings >= 1
+    row = ss.stats.as_row()
+    assert row["budget_halvings"] == ss.stats.budget_halvings
+    assert "backend_steps" in row and "upload_retries" in row
+
+
+def test_plan_spec_ladder_hook():
+    """``PlanSpec(ladder=...)`` and the ambient REPRO_LADDER policy both
+    feed ``make_engine``'s residency rung without a ``ladder=`` kwarg."""
+    idx, val, dims = _coo()
+    install(ChaosSpec(oom_resident=True))
+    state = make_engine((idx, val, dims), PlanSpec(chunk_nnz=128,
+                                                   ladder=True))
+    assert isinstance(state, StreamState)
+    # ambient policy answers when neither kwarg nor spec opt in
+    install(ChaosSpec(oom_resident=True))
+    prev = ladder.ambient()
+    try:
+        install_ambient(DEFAULT_POLICY)
+        state = make_engine((idx, val, dims), PlanSpec(chunk_nnz=128))
+        assert isinstance(state, StreamState)
+        # spec-level False wins over ambient
+        install(ChaosSpec(oom_resident=True))
+        with pytest.raises(ChaosOOM):
+            make_engine((idx, val, dims), PlanSpec(ladder=False))
+    finally:
+        uninstall_ambient()
+        if prev is not None:
+            install_ambient(prev)
 
 
 # --------------------------------------------------------------------------
